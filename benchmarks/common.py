@@ -1,0 +1,23 @@
+"""Shared benchmark harness utilities."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def timed(fn, *args, warmup: int = 1, iters: int = 1, **kw):
+    """Wall-clock a jittable callable (block_until_ready on outputs)."""
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters, out
+
+
+def row(name: str, seconds: float, **derived) -> str:
+    extra = ",".join(f"{k}={v}" for k, v in derived.items())
+    return f"{name},{seconds * 1e6:.0f},{extra}"

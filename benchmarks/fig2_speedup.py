@@ -1,0 +1,73 @@
+"""Paper Figure 2: training speedup vs cores (1 -> 32).
+
+This container has one core, so we report the *scheduling model* the
+paper's cluster realizes: per-level dual-CD work is sweeps_l x m_l^2
+(kernel-row evaluations); with c cores, level l's K_l independent
+partition solves take ceil(K_l / c) waves. Speedup(c) = T(1) / T(c) over
+the measured sweep counts of one SODM run. Two tolerance regimes:
+
+  * tight (tol=1e-3): the final full-size level still needs ~10 sweeps,
+    so Amdahl caps the speedup — this is the faithful-to-our-solver line;
+  * loose (tol=2e-2, the operating point of the paper's Fig 1 'stop at
+    different levels' curves): warm starts make late levels ~1 sweep and
+    the speedup approaches the paper's ~9-10x at 32 cores.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+
+from repro.core import kernel_fns as kf, odm, sodm
+from repro.data import synthetic
+
+PARAMS = odm.ODMParams(lam=10.0, theta=0.1, ups=0.5)
+
+
+def _speedup_curve(res, M, K, p, cores):
+    """T(1)/T(c) under wave scheduling of each level's partition solves."""
+    levels = []
+    m = M // K
+    k_l = K
+    for s in res.sweeps_per_level:
+        levels.append((int(s), m, k_l))
+        m *= p
+        k_l //= p
+    def t(c, block_parallel):
+        total = 0.0
+        for s, m_l, k_l in levels:
+            if block_parallel:
+                # dual_cd_block: the O(m^2) u-refresh (the sweep's dominant
+                # work) is a matmul over m/128-row tiles that distributes
+                # across cores TOGETHER with partition parallelism — the
+                # reason the TPU kernel exists (paper: distributed kernel
+                # computations inside each Spark solve).
+                par = min(c, max(k_l, 1) * max(1, m_l // 128))
+                total += s * m_l * m_l * max(k_l, 1) / par
+            else:
+                waves = math.ceil(max(k_l, 1) / c)
+                total += s * m_l * m_l * waves
+        return total
+    t1 = t(1, False)
+    return ({c: t1 / max(t(c, False), 1.0) for c in cores},
+            {c: t1 / max(t(c, True), 1.0) for c in cores})
+
+
+def run(out):
+    out.append("# fig2_speedup: regime,cores,speedup")
+    ds = synthetic.load("phishing", scale=0.4, max_d=128)
+    M = ds.x_train.shape[0] - ds.x_train.shape[0] % 32
+    x, y = ds.x_train[:M], ds.y_train[:M]
+    spec = kf.KernelSpec(name="rbf", gamma=kf.median_gamma(x))
+    cores = (1, 2, 4, 8, 16, 32)
+
+    for regime, tol in (("tight", 1e-3), ("loose", 2e-2)):
+        cfg = sodm.SODMConfig(p=2, levels=5, n_landmarks=8, tol=tol,
+                              max_sweeps=3000)
+        res = sodm.solve(spec, x, y, PARAMS, cfg, jax.random.PRNGKey(0))
+        out.append(f"fig2,{regime},sweeps_per_level,"
+                   f"{res.sweeps_per_level}")
+        waves, blockp = _speedup_curve(res, M, 32, 2, cores)
+        for c in cores:
+            out.append(f"fig2,{regime},{c},waves={waves[c]:.2f},"
+                       f"block_parallel={blockp[c]:.2f}")

@@ -1,0 +1,56 @@
+"""Pallas kernel micro-benchmarks: interpret-mode correctness timing plus
+the XLA-path equivalents they replace (the wall-clock numbers that matter
+are TPU-only; on CPU we report the ref-path timings and the kernels'
+arithmetic intensities for the roofline discussion)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timed
+from repro.core import kernel_fns as kf
+from repro.kernels import ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def run(out):
+    out.append("# kernels: name,config,seconds,derived")
+    # rbf gram XLA path (the kernel's oracle) at a few sizes
+    for M, D in ((1024, 128), (2048, 256), (4096, 256)):
+        x = jax.random.normal(KEY, (M, D))
+        f = jax.jit(lambda a: ref.rbf_gram(a, a, 0.5))
+        t, _ = timed(f, x, warmup=1, iters=3)
+        flops = 2 * M * M * D
+        out.append(f"kernels,rbf_gram_xla,M={M}_D={D},{t:.4f},"
+                   f"gflops={flops / t / 1e9:.1f}")
+
+    # flash attention XLA-scan path
+    from repro.models import attention as A
+    for T in (512, 1024):
+        q = jax.random.normal(KEY, (1, T, 8, 64)) * 0.3
+        k = jax.random.normal(jax.random.fold_in(KEY, 1), (1, T, 4, 64)) * 0.3
+        v = jax.random.normal(jax.random.fold_in(KEY, 2), (1, T, 4, 64)) * 0.3
+        f = jax.jit(lambda q, k, v: A._blocked_flash(
+            q, k, v, causal=True, window=None, q_offset=0, bk=256))
+        t, _ = timed(f, q, k, v, warmup=1, iters=3)
+        flops = 4 * T * T * 8 * 64  # qk + pv
+        out.append(f"kernels,flash_xla,T={T},{t:.4f},"
+                   f"gflops={flops / t / 1e9:.1f}")
+
+    # dual CD: paper-style scalar sweeps vs block-Gauss-Southwell
+    from repro.core import dual_cd, odm
+    M = 1024
+    x = jax.random.normal(KEY, (M, 16))
+    y = jnp.sign(jax.random.normal(jax.random.fold_in(KEY, 3), (M,)))
+    Q = kf.signed_gram(kf.KernelSpec("rbf", 0.5), x, y)
+    p = odm.ODMParams()
+    f1 = jax.jit(lambda Q: dual_cd.solve(Q, p, mscale=float(M), tol=1e-5,
+                                         max_sweeps=100).alpha)
+    t1, _ = timed(f1, Q, warmup=1, iters=2)
+    out.append(f"kernels,dual_cd_scalar,M={M},{t1:.4f},")
+    f2 = jax.jit(lambda Q: dual_cd.solve_block(Q, p, mscale=float(M),
+                                               block=256, tol=1e-5).alpha)
+    t2, _ = timed(f2, Q, warmup=1, iters=2)
+    out.append(f"kernels,dual_cd_block,M={M},{t2:.4f},"
+               f"speedup_vs_scalar={t1 / t2:.2f}")

@@ -1,0 +1,41 @@
+"""Roofline report: aggregates results/cells/*.json into the §Roofline
+table (all three terms per (arch x shape x mesh), dominant bottleneck,
+MODEL_FLOPS vs HLO FLOPs ratio)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def run(out, cells_dir: str = "results/cells"):
+    out.append("# roofline: arch,shape,mesh,compute_s,memory_s,"
+               "collective_s,dominant,useful_ratio,peak_GiB")
+    files = sorted(glob.glob(os.path.join(cells_dir, "*.json")))
+    if not files:
+        out.append("roofline,NO_CELLS_FOUND,run src/repro/launch/sweep.sh")
+        return
+    n_ok = n_skip = 0
+    for f in files:
+        try:
+            r = json.load(open(f))[0]
+        except Exception:
+            continue
+        if r["status"] == "skipped":
+            n_skip += 1
+            out.append(f"roofline,{r['arch']},{r['shape']},-,SKIP,"
+                       f"{r['reason'][:60]}")
+            continue
+        if r["status"] != "ok":
+            out.append(f"roofline,{r['arch']},{r['shape']},"
+                       f"{r.get('mesh','?')},ERROR")
+            continue
+        n_ok += 1
+        rl = r["roofline"]
+        out.append(
+            f"roofline,{r['arch']},{r['shape']},{r['mesh']},"
+            f"{rl['compute_s']:.4f},{rl['memory_s']:.4f},"
+            f"{rl['collective_s']:.4f},{rl['dominant']},"
+            f"{r['model_flops']['useful_ratio']:.3f},"
+            f"{r['memory']['peak_estimate_bytes'] / 2**30:.1f}")
+    out.append(f"roofline,summary,ok={n_ok},skipped={n_skip}")

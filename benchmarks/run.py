@@ -1,0 +1,44 @@
+"""Benchmark driver: one module per paper table/figure + kernel micro +
+roofline aggregation. Prints CSV-ish lines; `python -m benchmarks.run`.
+
+Select subsets: `python -m benchmarks.run table2 fig4`.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks import (fig2_speedup, fig4_gradient, kernels_bench,
+                        roofline_report, table2_rbf, table3_linear,
+                        table4_svm)
+
+ALL = {
+    "table2": table2_rbf.run,
+    "table3": table3_linear.run,
+    "table4": table4_svm.run,
+    "fig2": fig2_speedup.run,
+    "fig4": fig4_gradient.run,
+    "kernels": kernels_bench.run,
+    "roofline": roofline_report.run,
+}
+
+
+def main() -> int:
+    picks = sys.argv[1:] or list(ALL)
+    out: list[str] = []
+    for name in picks:
+        if name not in ALL:
+            print(f"unknown benchmark {name!r}; options: {list(ALL)}")
+            return 1
+        t0 = time.time()
+        print(f"=== {name} ===", flush=True)
+        ALL[name](out)
+        for line in out:
+            print(line, flush=True)
+        print(f"=== {name} done in {time.time() - t0:.1f}s ===", flush=True)
+        out.clear()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,83 @@
+"""Paper Table 4 (appendix): ODM variants vs their SVM counterparts.
+
+The SVM counterpart here is an L2-SVM (squared hinge) trained on the same
+features: linear directly, RBF via a Nystrom map built from the SAME
+det-max landmarks the SODM partitioner selects (Eqn. 8) — a neat reuse:
+the paper's landmark selector doubles as a kernel approximation. The
+appendix's qualitative conclusion to validate: ODM-based methods beat
+their SVM counterparts on accuracy on most sets (margin *distribution* >
+margin).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timed
+from repro.core import kernel_fns as kf, odm, partition, sodm
+from repro.data import synthetic
+
+DATASETS = ["svmguide1", "phishing", "a7a", "cod-rna"]
+SCALE = {"svmguide1": 0.12, "phishing": 0.08, "a7a": 0.03, "cod-rna": 0.015}
+
+
+def _l2svm(x, y, epochs=300, lr=0.1, c=1.0):
+    """Squared-hinge SVM, full-batch GD (deterministic, CPU-friendly)."""
+    w = jnp.zeros(x.shape[1])
+    b = jnp.array(0.0)
+
+    @jax.jit
+    def step(w, b):
+        def loss(wb):
+            w_, b_ = wb
+            m = y * (x @ w_ + b_)
+            return 0.5 * w_ @ w_ + c * jnp.mean(
+                jnp.maximum(0.0, 1.0 - m) ** 2)
+        g = jax.grad(loss)((w, b))
+        return w - lr * g[0], b - lr * g[1]
+
+    for _ in range(epochs):
+        w, b = step(w, b)
+    return w, b
+
+
+def _nystrom(spec, x, landmarks_x, jitter=1e-6):
+    """phi(x) = K(x, Z) K(Z, Z)^{-1/2} — rank-|Z| kernel feature map."""
+    kzz = kf.gram(spec, landmarks_x)
+    evals, evecs = jnp.linalg.eigh(kzz + jitter * jnp.eye(kzz.shape[0]))
+    inv_sqrt = evecs @ jnp.diag(1.0 / jnp.sqrt(jnp.maximum(evals, jitter))) \
+        @ evecs.T
+    return lambda q: kf.gram(spec, q, landmarks_x) @ inv_sqrt
+
+
+def run(out):
+    out.append("# table4_svm: dataset,method,acc,seconds")
+    wins = 0
+    for name in DATASETS:
+        ds = synthetic.load(name, scale=SCALE[name], max_d=256)
+        M = ds.x_train.shape[0] - ds.x_train.shape[0] % 8
+        x, y = ds.x_train[:M], ds.y_train[:M]
+        spec = kf.KernelSpec(name="rbf", gamma=kf.median_gamma(x))
+        params = odm.ODMParams(lam=100.0, theta=0.1, ups=0.5)
+        cfg = sodm.SODMConfig(p=2, levels=3, n_landmarks=8, tol=1e-4,
+                              max_sweeps=200)
+
+        t, res = timed(lambda: sodm.solve(spec, x, y, params, cfg,
+                                          jax.random.PRNGKey(0)), warmup=0)
+        acc_odm = float(odm.accuracy(
+            ds.y_test, sodm.predict(spec, res, x, y, ds.x_test)))
+        out.append(f"table4,{name},SODM,{acc_odm:.4f},{t:.2f}")
+
+        # SVM counterpart on the Nystrom map from the same landmarks
+        def svm_fit():
+            lm = partition.select_landmarks(spec, x, 32)
+            phi = _nystrom(spec, x, x[lm])
+            w, b = _l2svm(phi(x), y)
+            return phi, w, b
+        t, (phi, w, b) = timed(svm_fit, warmup=0)
+        acc_svm = float(odm.accuracy(ds.y_test,
+                                     jnp.sign(phi(ds.x_test) @ w + b)))
+        out.append(f"table4,{name},SSVM(nystrom),{acc_svm:.4f},{t:.2f}")
+        if acc_odm >= acc_svm - 1e-6:
+            wins += 1
+    out.append(f"table4,summary,SODM_beats_SVM_on,{wins}/{len(DATASETS)},")

@@ -1,0 +1,13 @@
+"""Serve a small model with batched requests (prefill + decode loop).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch qwen3-0.6b
+Delegates to the production serving launcher (repro.launch.serve).
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:] or
+                  ["--arch", "qwen3-0.6b", "--batch", "4",
+                   "--prompt-len", "32", "--gen", "16"]))

@@ -1,0 +1,5 @@
+"""repro — Scalable Optimal Margin Distribution Machine (SODM) as a
+production JAX framework (IJCAI 2023 reproduction + TPU-native extension).
+"""
+
+__version__ = "0.1.0"

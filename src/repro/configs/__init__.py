@@ -1,0 +1,8 @@
+from repro.configs.base import (SHAPES, ArchConfig, EncoderConfig, MoEConfig,
+                                RGLRUConfig, ShapeConfig, SSMConfig,
+                                shape_applicable)
+from repro.configs.registry import ARCH_NAMES, cells, get, get_shape, get_smoke
+
+__all__ = ["SHAPES", "ArchConfig", "EncoderConfig", "MoEConfig",
+           "RGLRUConfig", "ShapeConfig", "SSMConfig", "shape_applicable",
+           "ARCH_NAMES", "cells", "get", "get_shape", "get_smoke"]

@@ -1,0 +1,17 @@
+"""The paper's contribution: ODM / SODM solvers (Wang et al., IJCAI 2023).
+
+Public surface:
+  kernel_fns  — KernelSpec + gram computations
+  odm         — primal/dual objectives, gradients, prediction
+  dual_cd     — dual coordinate descent (exact + block-Gauss-Seidel)
+  partition   — Section 3.2 distribution-aware partitioning (Eqn. 7-8)
+  sodm        — Algorithm 1 (hierarchical merge, warm starts, shard_map)
+  dsvrg       — Algorithm 2 (communication-efficient SVRG, linear kernel)
+  baselines   — Ca-ODM / DiP-ODM / DC-ODM / SVRG / CSVRG rivals
+  theory      — Theorem 1/2 bound evaluation
+"""
+from repro.core import (baselines, dsvrg, dual_cd, kernel_fns, odm, partition,
+                        sodm, theory)
+
+__all__ = ["baselines", "dsvrg", "dual_cd", "kernel_fns", "odm", "partition",
+           "sodm", "theory"]

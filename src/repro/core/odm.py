@@ -1,0 +1,205 @@
+"""Optimal margin Distribution Machine (ODM) — primal and dual forms.
+
+Paper: Zhang & Zhou 2019 (ODM); Wang et al. IJCAI 2023 (SODM) Eqns. (1)-(3).
+
+Primal (Eqn. 9 of the appendix):
+
+    min_w  p(w) = 1/2 ||w||^2 + lam/(2 M (1-theta)^2) * sum_i (xi_i^2 + ups*eps_i^2)
+    s.t.   1 - theta - xi_i <= y_i w^T phi(x_i) <= 1 + theta + eps_i
+
+Dual (Eqn. 1/2), alpha = [zeta; beta] in R^{2M}_+:
+
+    min_alpha f(alpha) = 1/2 alpha^T H alpha + b^T alpha
+    H = [[Q + M c ups I, -Q], [-Q, Q + M c I]]
+    b = [(theta-1) 1_M ; (theta+1) 1_M],   c = (1-theta)^2 / (lam ups)
+
+Strong duality holds with p(w*) = -f(alpha*).
+
+Everything here is pure jnp so it can run inside jit / shard_map / scan.
+The *scale* of the regularizer (the "M" multiplying c) is an explicit
+argument ``mscale`` because SODM's local subproblems use m = M/K in that
+slot (Eqn. 4) while keeping the same c.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kernel_fns as kf
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ODMParams:
+    """Hyperparameters of ODM. ``ups`` is the paper's upsilon (v)."""
+
+    lam: float = 1.0
+    theta: float = 0.1
+    ups: float = 0.5
+
+    @property
+    def c(self) -> float:
+        """c = (1-theta)^2 / (lam * ups), constant in the dual Hessian."""
+        return (1.0 - self.theta) ** 2 / (self.lam * self.ups)
+
+
+class DualState(NamedTuple):
+    """State threaded through dual coordinate descent.
+
+    alpha:  (2m,) dual variables [zeta; beta] >= 0.
+    u:      (m,) maintained product Q @ (zeta - beta)  (gradient cache).
+    """
+
+    alpha: Array
+    u: Array
+
+
+# ---------------------------------------------------------------------------
+# dual form
+# ---------------------------------------------------------------------------
+
+def split_alpha(alpha: Array) -> tuple[Array, Array]:
+    m = alpha.shape[0] // 2
+    return alpha[:m], alpha[m:]
+
+
+def dual_objective(Q: Array, alpha: Array, params: ODMParams,
+                   mscale: float) -> Array:
+    """f(alpha) = 1/2 a^T H a + b^T a with explicit regularizer scale."""
+    zeta, beta = split_alpha(alpha)
+    gam = zeta - beta
+    quad = 0.5 * gam @ (Q @ gam)
+    reg = 0.5 * mscale * params.c * (params.ups * zeta @ zeta + beta @ beta)
+    lin = (params.theta - 1.0) * jnp.sum(zeta) + (params.theta + 1.0) * jnp.sum(beta)
+    return quad + reg + lin
+
+
+def dual_grad(Q: Array, alpha: Array, params: ODMParams,
+              mscale: float) -> Array:
+    """grad f(alpha) = H alpha + b, computed via u = Q (zeta-beta)."""
+    zeta, beta = split_alpha(alpha)
+    u = Q @ (zeta - beta)
+    return dual_grad_from_u(u, alpha, params, mscale)
+
+
+def dual_grad_from_u(u: Array, alpha: Array, params: ODMParams,
+                     mscale: float) -> Array:
+    """Gradient given the cached u = Q (zeta - beta)."""
+    zeta, beta = split_alpha(alpha)
+    gz = u + mscale * params.c * params.ups * zeta + (params.theta - 1.0)
+    gb = -u + mscale * params.c * beta + (params.theta + 1.0)
+    return jnp.concatenate([gz, gb])
+
+
+def hess_diag(q_diag: Array, params: ODMParams, mscale: float) -> Array:
+    """diag(H) = [Q_ii + M c ups; Q_ii + M c]."""
+    hz = q_diag + mscale * params.c * params.ups
+    hb = q_diag + mscale * params.c
+    return jnp.concatenate([hz, hb])
+
+
+def kkt_residual(Q: Array, alpha: Array, params: ODMParams,
+                 mscale: float) -> Array:
+    """Projected-gradient infinity norm for the box constraint alpha >= 0.
+
+    At optimum: grad_i >= 0 where alpha_i = 0, grad_i = 0 where alpha_i > 0.
+    """
+    g = dual_grad(Q, alpha, params, mscale)
+    proj = jnp.where(alpha > 0.0, jnp.abs(g), jnp.maximum(-g, 0.0))
+    return jnp.max(proj)
+
+
+# ---------------------------------------------------------------------------
+# primal form (linear kernel)
+# ---------------------------------------------------------------------------
+
+def margins(w: Array, x: Array, y: Array) -> Array:
+    """y_i w^T x_i, shape (M,)."""
+    return y * (x @ w)
+
+
+def primal_objective(w: Array, x: Array, y: Array, params: ODMParams) -> Array:
+    m = margins(w, x, y)
+    xi = jnp.maximum(0.0, (1.0 - params.theta) - m)
+    eps = jnp.maximum(0.0, m - (1.0 + params.theta))
+    M = x.shape[0]
+    loss = (xi @ xi + params.ups * (eps @ eps)) * params.lam / (
+        2.0 * M * (1.0 - params.theta) ** 2)
+    return 0.5 * w @ w + loss
+
+
+def primal_grad(w: Array, x: Array, y: Array, params: ODMParams) -> Array:
+    """Full-batch grad p(w); matches the mean of per-instance grads below."""
+    M = x.shape[0]
+    m = margins(w, x, y)
+    s = params.lam / (M * (1.0 - params.theta) ** 2)
+    lo = jnp.where(m < 1.0 - params.theta, m + params.theta - 1.0, 0.0)
+    hi = jnp.where(m > 1.0 + params.theta, m - params.theta - 1.0, 0.0)
+    coef = s * (lo + params.ups * hi) * y      # (M,)
+    return w + x.T @ coef
+
+
+def per_instance_grad(w: Array, x_i: Array, y_i: Array, params: ODMParams,
+                      M: int) -> Array:
+    """The paper's nabla p_i(w) (Section 3.3) — unbiased: E_i[...] = grad p.
+
+    The paper's per-instance loss term carries no 1/M (it is M times the
+    instance's 1/M share of the empirical loss), so a uniformly sampled i
+    gives an unbiased estimator of the full gradient. ``M`` is accepted for
+    signature parity with :func:`minibatch_grad` but unused.
+    """
+    del M
+    m = y_i * (x_i @ w)
+    s = params.lam / (1.0 - params.theta) ** 2
+    lo = jnp.where(m < 1.0 - params.theta, m + params.theta - 1.0, 0.0)
+    hi = jnp.where(m > 1.0 + params.theta, m - params.theta - 1.0, 0.0)
+    return w + (s * (lo + params.ups * hi) * y_i) * x_i
+
+
+def minibatch_grad(w: Array, xb: Array, yb: Array, params: ODMParams,
+                   M: int) -> Array:
+    """Mean over the batch of the paper's per-instance gradients.
+
+    E_batch[minibatch_grad] = primal_grad when instances are drawn uniformly,
+    because each per-instance grad is w + M * (its 1/M loss-grad share).
+    ``M`` is accepted for signature parity but unused.
+    """
+    del M
+    m = yb * (xb @ w)
+    s = params.lam / (1.0 - params.theta) ** 2
+    lo = jnp.where(m < 1.0 - params.theta, m + params.theta - 1.0, 0.0)
+    hi = jnp.where(m > 1.0 + params.theta, m - params.theta - 1.0, 0.0)
+    coef = s * (lo + params.ups * hi) * yb            # (B,)
+    # mean_i [ w + coef_i x_i ] = w + (1/B) X^T coef
+    return w + (xb.T @ coef) / xb.shape[0]
+
+
+# ---------------------------------------------------------------------------
+# primal <-> dual bridges and prediction
+# ---------------------------------------------------------------------------
+
+def w_from_alpha(x: Array, y: Array, alpha: Array) -> Array:
+    """KKT: w = X Y (zeta - beta) — linear kernel only."""
+    zeta, beta = split_alpha(alpha)
+    return x.T @ (y * (zeta - beta))
+
+
+def decision_function(spec: kf.KernelSpec, x_train: Array, y_train: Array,
+                      alpha: Array, x_test: Array) -> Array:
+    """f(x) = sum_i y_i (zeta_i - beta_i) kappa(x_i, x)."""
+    zeta, beta = split_alpha(alpha)
+    coef = y_train * (zeta - beta)
+    return kf.gram(spec, x_test, x_train) @ coef
+
+
+def predict(spec: kf.KernelSpec, x_train: Array, y_train: Array,
+            alpha: Array, x_test: Array) -> Array:
+    return jnp.sign(decision_function(spec, x_train, y_train, alpha, x_test))
+
+
+def accuracy(y_true: Array, y_pred: Array) -> Array:
+    return jnp.mean((y_true * y_pred) > 0.0)

@@ -1,0 +1,275 @@
+"""SODM Algorithm 1 — hierarchical partitioned ODM solve with warm starts.
+
+Level l has K_l = p^l partitions of size m_l = M / K_l. Each partition's
+local ODM (Eqn. 4 block) is solved by dual coordinate descent; when p
+sibling partitions merge, their dual vectors are concatenated as the warm
+start of the parent solve (Algorithm 1 line 12). Theorem 1 bounds the gap
+between the block-diagonal approximation and the global dual, so the warm
+start is already near-optimal and the parent solve converges in a few
+sweeps.
+
+Layout note: each local alpha is [zeta_k; beta_k] (2 m_l,). The parent's
+alpha is [zeta_all; beta_all] (2 p m_l,), so "concatenation" interleaves:
+parent_zeta = concat(zeta_children), parent_beta = concat(beta_children).
+``merge_alphas`` implements exactly that.
+
+Two execution engines:
+
+* :func:`solve` — single-process: ``vmap`` over partitions per level
+  (levels are a Python loop; shapes are static per level so each level
+  compiles once and is reused across calls with the same sizes).
+
+* :func:`solve_sharded` — SPMD: ``shard_map`` over the mesh ``data`` axis.
+  While K_l >= n_dev each device sweeps its own slab of partitions with
+  **zero** cross-device traffic (the paper's "parallel training" phase);
+  when a merge would span devices we all-gather X/y/alpha inside the merge
+  group (axis-index arithmetic) — this is the Spark shuffle of the paper
+  mapped onto ICI collectives.
+
+Both engines checkpoint per level through ``level_callback`` for fault
+tolerance (see repro.distributed.checkpoint).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import dual_cd, kernel_fns as kf
+from repro.core import partition as part_mod
+from repro.core.odm import ODMParams
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SODMConfig:
+    """Hyperparameters of the SODM solve."""
+
+    p: int = 2                 # merge factor (partitions merged per level)
+    levels: int = 3            # L: start with p^L partitions
+    n_landmarks: int = 8       # S strata
+    tol: float = 1e-4          # per-solve KKT tolerance
+    max_sweeps: int = 100      # CD sweep cap per local solve
+    early_stop: bool = True    # Algorithm 1 line 5-6
+    partition_strategy: str = "stratified"   # stratified | random | cluster
+
+
+class SODMResult(NamedTuple):
+    alpha: Array             # (2M,) global-layout dual solution
+    perm: Array              # (M,) partition permutation applied to the data
+    levels_run: int
+    sweeps_per_level: list   # python list of int sweep counts (max over partitions)
+    kkt: Array               # final global KKT residual (if computed) or per-level
+
+
+def merge_alphas(alphas: Array) -> Array:
+    """(K, 2m) per-partition [zeta;beta] -> (2*K*m,) global [zeta_all;beta_all]."""
+    K, two_m = alphas.shape
+    m = two_m // 2
+    zetas = alphas[:, :m].reshape(-1)
+    betas = alphas[:, m:].reshape(-1)
+    return jnp.concatenate([zetas, betas])
+
+
+def split_to_partitions(alpha: Array, K: int) -> Array:
+    """Inverse of merge_alphas: (2M,) -> (K, 2m)."""
+    M = alpha.shape[0] // 2
+    m = M // K
+    zetas = alpha[:M].reshape(K, m)
+    betas = alpha[M:].reshape(K, m)
+    return jnp.concatenate([zetas, betas], axis=1)
+
+
+def _solve_level(xs: Array, ys: Array, alphas: Array, spec: kf.KernelSpec,
+                 params: ODMParams, tol: float, max_sweeps: int):
+    """vmap'd local ODM solves: xs (K, m, d), ys (K, m), alphas (K, 2m)."""
+    m = xs.shape[1]
+
+    def one(xk, yk, ak):
+        Q = kf.signed_gram(spec, xk, yk)
+        res = dual_cd.solve(Q, params, mscale=float(m), alpha0=ak,
+                            tol=tol, max_sweeps=max_sweeps)
+        return res.alpha, res.sweeps, res.kkt
+
+    return jax.vmap(one)(xs, ys, alphas)
+
+
+def solve(spec: kf.KernelSpec, x: Array, y: Array, params: ODMParams,
+          cfg: SODMConfig, key: jax.Array,
+          level_callback: Callable[[int, Array], None] | None = None,
+          ) -> SODMResult:
+    """Single-process SODM (Algorithm 1)."""
+    M = x.shape[0]
+    K0 = cfg.p ** cfg.levels
+    if M % K0 != 0:
+        raise ValueError(f"p^L={K0} must divide M={M}")
+
+    if cfg.partition_strategy == "stratified":
+        plan = part_mod.make_plan(spec, x, cfg.n_landmarks, K0, key)
+        perm = plan.perm
+    elif cfg.partition_strategy == "random":
+        perm = part_mod.random_partitions(M, K0, key)
+    elif cfg.partition_strategy == "cluster":
+        perm = part_mod.cluster_partitions(spec, x, K0, key)
+    elif cfg.partition_strategy == "identity":
+        perm = jnp.arange(M)       # caller already laid the data out
+    else:
+        raise ValueError(cfg.partition_strategy)
+
+    xp, yp = x[perm], y[perm]
+
+    K = K0
+    m = M // K
+    alphas = jnp.zeros((K, 2 * m), x.dtype)
+    sweeps_per_level: list = []
+    kkt = jnp.array(jnp.inf, x.dtype)
+
+    level = cfg.levels
+    solve_jit = jax.jit(_solve_level,
+                        static_argnames=("spec", "params", "tol", "max_sweeps"))
+    while True:
+        xs = xp.reshape(K, m, -1)
+        ys = yp.reshape(K, m)
+        alphas, sweeps, kkts = solve_jit(xs, ys, alphas, spec=spec,
+                                         params=params, tol=cfg.tol,
+                                         max_sweeps=cfg.max_sweeps)
+        sweeps_per_level.append(int(jnp.max(sweeps)))
+        kkt = jnp.max(kkts)
+        if level_callback is not None:
+            level_callback(level, alphas)
+        # Algorithm 1 line 5: if all local solves already satisfied the
+        # warm start (0 sweeps => init was within tol), we are converged.
+        converged = cfg.early_stop and int(jnp.max(sweeps)) == 0 and level < cfg.levels
+        if K == 1 or level == 0 or converged:
+            break
+        # merge p siblings: (K, 2m) -> (K/p, 2pm), interleaving zeta/beta
+        Kn = K // cfg.p
+        grouped = alphas.reshape(Kn, cfg.p, 2 * m)
+        merged = jax.vmap(merge_alphas)(grouped)       # (Kn, 2 p m)
+        alphas = merged
+        K, m = Kn, m * cfg.p
+        level -= 1
+
+    alpha = merge_alphas(alphas) if alphas.ndim == 2 and alphas.shape[0] > 1 \
+        else alphas.reshape(-1)
+    return SODMResult(alpha=alpha, perm=perm, levels_run=cfg.levels - level + 1,
+                      sweeps_per_level=sweeps_per_level, kkt=kkt)
+
+
+# ---------------------------------------------------------------------------
+# SPMD engine (shard_map over the mesh `data` axis)
+# ---------------------------------------------------------------------------
+
+def _level_body_local(xs, ys, alphas, spec, params, tol, max_sweeps, m):
+    """Per-device body: solve this device's slab of partitions (k_loc, m, d)."""
+    def one(xk, yk, ak):
+        Q = kf.signed_gram(spec, xk, yk)
+        res = dual_cd.solve(Q, params, mscale=float(m), alpha0=ak,
+                            tol=tol, max_sweeps=max_sweeps)
+        return res.alpha, res.sweeps, res.kkt
+    return jax.vmap(one)(xs, ys, alphas)
+
+
+def solve_sharded(spec: kf.KernelSpec, x: Array, y: Array, params: ODMParams,
+                  cfg: SODMConfig, key: jax.Array, mesh: jax.sharding.Mesh,
+                  data_axis: str = "data") -> SODMResult:
+    """SODM with partitions sharded over ``mesh[data_axis]``.
+
+    Preconditions: p^L partitions, n_dev = mesh.shape[data_axis], and
+    p^L % n_dev == 0 (each device starts with an equal slab). Levels with
+    K_l >= n_dev run with zero communication. Once K_l < n_dev the data
+    no longer fills the axis; we gather everything and finish replicated —
+    at that point the problem is a single in-memory QP anyway.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    M = x.shape[0]
+    K0 = cfg.p ** cfg.levels
+    n_dev = mesh.shape[data_axis]
+    if K0 % n_dev != 0:
+        raise ValueError(f"p^L={K0} must be a multiple of data axis {n_dev}")
+
+    if cfg.partition_strategy == "stratified":
+        plan = part_mod.make_plan(spec, x, cfg.n_landmarks, K0, key)
+        perm = plan.perm
+    else:
+        perm = part_mod.random_partitions(M, K0, key)
+    xp, yp = x[perm], y[perm]
+
+    K, m = K0, M // K0
+    alphas = jnp.zeros((K, 2 * m), x.dtype)
+    sweeps_per_level: list = []
+    kkt = jnp.array(jnp.inf, x.dtype)
+    level = cfg.levels
+
+    while K >= n_dev:
+        xs = xp.reshape(K, m, -1)
+        ys = yp.reshape(K, m)
+
+        body = partial(_level_body_local, spec=spec, params=params,
+                       tol=cfg.tol, max_sweeps=cfg.max_sweeps, m=m)
+        shmapped = shard_map(
+            lambda a, b, c: body(a, b, c),
+            mesh=mesh,
+            in_specs=(P(data_axis), P(data_axis), P(data_axis)),
+            out_specs=(P(data_axis), P(data_axis), P(data_axis)),
+        )
+        alphas, sweeps, kkts = jax.jit(shmapped)(xs, ys, alphas)
+        sweeps_per_level.append(int(jnp.max(sweeps)))
+        kkt = jnp.max(kkts)
+        if K == 1:
+            break
+        Kn = K // cfg.p
+        grouped = alphas.reshape(Kn, cfg.p, 2 * m)
+        alphas = jax.vmap(merge_alphas)(grouped)
+        K, m = Kn, m * cfg.p
+        level -= 1
+        if K < n_dev and K >= 1:
+            break
+
+    # replicated tail for K < n_dev (tiny residual levels)
+    tail_jit = jax.jit(_solve_level,
+                       static_argnames=("spec", "params", "tol",
+                                        "max_sweeps"))
+    while K >= 1:
+        xs = xp.reshape(K, m, -1)
+        ys = yp.reshape(K, m)
+        alphas, sweeps, kkts = tail_jit(xs, ys, alphas, spec=spec,
+                                        params=params, tol=cfg.tol,
+                                        max_sweeps=cfg.max_sweeps)
+        sweeps_per_level.append(int(jnp.max(sweeps)))
+        kkt = jnp.max(kkts)
+        if K == 1:
+            break
+        Kn = K // cfg.p
+        grouped = alphas.reshape(Kn, cfg.p, 2 * m)
+        alphas = jax.vmap(merge_alphas)(grouped)
+        K, m = Kn, m * cfg.p
+        level -= 1
+
+    alpha = alphas.reshape(-1)
+    return SODMResult(alpha=alpha, perm=perm, levels_run=cfg.levels + 1,
+                      sweeps_per_level=sweeps_per_level, kkt=kkt)
+
+
+# ---------------------------------------------------------------------------
+# convenience: fit + predict in original index order
+# ---------------------------------------------------------------------------
+
+def fit(spec: kf.KernelSpec, x: Array, y: Array, params: ODMParams,
+        cfg: SODMConfig, key: jax.Array) -> tuple[SODMResult, Array, Array]:
+    """Returns (result, x_perm, y_perm); alpha is aligned with the permuted data."""
+    res = solve(spec, x, y, params, cfg, key)
+    return res, x[res.perm], y[res.perm]
+
+
+def predict(spec: kf.KernelSpec, res: SODMResult, x_train: Array,
+            y_train: Array, x_test: Array) -> Array:
+    from repro.core import odm
+    xp, yp = x_train[res.perm], y_train[res.perm]
+    return odm.predict(spec, xp, yp, res.alpha, x_test)

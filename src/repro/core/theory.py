@@ -1,0 +1,128 @@
+"""Evaluate the paper's Theorem 1 / Theorem 2 bounds on concrete problems.
+
+Used by property tests (tests/test_theory.py) and the partition-strategy
+ablation benchmark: the theorems must *hold* for any valid inputs, and the
+stratified strategy should give a smaller Q-bar (cross-partition kernel
+mass) than random/cluster partitions — that is the mechanism behind the
+paper's speedup.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dual_cd, kernel_fns as kf
+from repro.core.odm import ODMParams, dual_objective
+
+Array = jax.Array
+
+
+class Theorem1Eval(NamedTuple):
+    gap_objective: Array      # d(zeta~*, beta~*) - d(zeta*, beta*)
+    gap_solution: Array       # ||alpha~* - alpha*||^2
+    bound_objective: Array    # U^2 (Qbar + M (M - m) c)
+    bound_solution: Array     # U^2/(M c v) (Qbar + M (M - m) c)
+    holds: Array              # both inequalities satisfied (with fp slack)
+
+
+def solve_global_and_blockwise(spec: kf.KernelSpec, x: Array, y: Array,
+                               params: ODMParams, n_partitions: int,
+                               tol: float = 1e-7, max_sweeps: int = 2000):
+    """Optimal alpha for the global dual and for the block-diagonal
+    approximation (Eqn. 4). Data is assumed already laid out in partition
+    order (apply the plan's permutation first)."""
+    M = x.shape[0]
+    m = M // n_partitions
+    Q = kf.signed_gram(spec, x, y)
+    res_g = dual_cd.solve(Q, params, mscale=float(M), tol=tol,
+                          max_sweeps=max_sweeps)
+    # block-diagonal problem = K decoupled local solves with mscale=m
+    pid = jnp.arange(M) // m
+    mask = (pid[:, None] == pid[None, :]).astype(Q.dtype)
+    Qt = Q * mask
+    res_b = dual_cd.solve(Qt, params, mscale=float(m), tol=tol,
+                          max_sweeps=max_sweeps)
+    return Q, Qt, res_g.alpha, res_b.alpha
+
+
+def eval_theorem1(spec: kf.KernelSpec, x: Array, y: Array, params: ODMParams,
+                  n_partitions: int, tol: float = 1e-7) -> Theorem1Eval:
+    M = x.shape[0]
+    m = M // n_partitions
+    Q, Qt, a_g, a_b = solve_global_and_blockwise(spec, x, y, params,
+                                                 n_partitions, tol=tol)
+    d_g = dual_objective(Q, a_g, params, float(M))
+    d_b = dual_objective(Q, a_b, params, float(M))     # d() of the approx solution
+    gap_obj = d_b - d_g
+    gap_sol = jnp.sum((a_b - a_g) ** 2)
+
+    U = jnp.maximum(jnp.max(jnp.abs(a_g)), jnp.max(jnp.abs(a_b)))
+    pid = jnp.arange(M) // m
+    cross = pid[:, None] != pid[None, :]
+    Qbar = jnp.sum(jnp.where(cross, jnp.abs(Q), 0.0))
+    c = params.c
+    bound_obj = U ** 2 * (Qbar + M * (M - m) * c)
+    bound_sol = U ** 2 / (M * c * params.ups) * (Qbar + M * (M - m) * c)
+    slack = 1e-6 + 1e-5 * jnp.abs(bound_obj)
+    holds = jnp.logical_and(
+        jnp.logical_and(gap_obj >= -slack, gap_obj <= bound_obj + slack),
+        gap_sol <= bound_sol + slack)
+    return Theorem1Eval(gap_objective=gap_obj, gap_solution=gap_sol,
+                        bound_objective=bound_obj, bound_solution=bound_sol,
+                        holds=holds)
+
+
+class Theorem2Eval(NamedTuple):
+    gap: Array               # d_k(local) - d(global) for the worst k
+    bound: Array
+    cos_tau: Array
+    holds: Array
+
+
+def eval_theorem2(spec: kf.KernelSpec, x: Array, y: Array, params: ODMParams,
+                  stratum: Array, n_partitions: int, perm: Array,
+                  tol: float = 1e-7) -> Theorem2Eval:
+    """Evaluates the Theorem-2 upper bound for the stratified partitions.
+
+    Requires a shift-invariant kernel (r^2 = kappa(0)); asserts via
+    spec.diag_value().
+    """
+    r2 = spec.diag_value()
+    M = x.shape[0]
+    m = M // n_partitions
+    xp, yp = x[perm], y[perm]
+    Q = kf.signed_gram(spec, xp, yp)
+    res_g = dual_cd.solve(Q, params, mscale=float(M), tol=tol, max_sweeps=2000)
+    d_g = dual_objective(Q, res_g.alpha, params, float(M))
+
+    # worst-k local objective (each local uses mscale=m, objective d_k)
+    worst = -jnp.inf
+    U = jnp.max(jnp.abs(res_g.alpha))
+    for k in range(n_partitions):
+        sl = slice(k * m, (k + 1) * m)
+        Qk = Q[sl, sl]
+        res_k = dual_cd.solve(Qk, params, mscale=float(m), tol=tol,
+                              max_sweeps=2000)
+        d_k = dual_objective(Qk, res_k.alpha, params, float(m))
+        worst = jnp.maximum(worst, d_k - d_g)
+        U = jnp.maximum(U, jnp.max(jnp.abs(res_k.alpha)))
+
+    cos_tau = part_cos_tau(spec, x, stratum)
+    C = jnp.sum((stratum[:, None] != stratum[None, :]).astype(jnp.float32))
+    c = params.c
+    bound = (U ** 2 / 2.0 * (M ** 2 * r2 + r2 * cos_tau * (2.0 * C - M ** 2))
+             + U ** 2 * M ** 2 * c + 2.0 * U * M)
+    slack = 1e-6 + 1e-5 * jnp.abs(bound)
+    return Theorem2Eval(gap=worst, bound=bound, cos_tau=cos_tau,
+                        holds=worst <= bound + slack)
+
+
+def part_cos_tau(spec: kf.KernelSpec, x: Array, stratum: Array) -> Array:
+    """cos of the minimal principal angle across strata (Theorem 2's tau)."""
+    K = kf.gram(spec, x)
+    diag = jnp.sqrt(jnp.maximum(kf.gram_diag(spec, x), 1e-12))
+    Kn = K / (diag[:, None] * diag[None, :])
+    cross = stratum[:, None] != stratum[None, :]
+    return jnp.max(jnp.where(cross, Kn, -jnp.inf))

@@ -1,0 +1,3 @@
+from repro.data import lm, stratified, synthetic
+
+__all__ = ["lm", "stratified", "synthetic"]

@@ -1,0 +1,3 @@
+from repro.distributed import checkpoint, elastic, straggler
+
+__all__ = ["checkpoint", "elastic", "straggler"]

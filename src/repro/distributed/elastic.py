@@ -1,0 +1,48 @@
+"""Elastic resharding: move a job between meshes without conversion tools.
+
+The framework's state (params, optimizer, SODM solver state) is always
+saved as *full logical arrays* plus logical-axis annotations — never as
+device-local shards with baked-in device ids. Rescaling is therefore just
+re-resolving shardings against the new mesh and device_put'ing:
+
+    old job on (pod=2, data=16, model=16)   -> checkpoint
+    new job on (data=16, model=16)          -> restore(..., mesh=new_mesh)
+
+``reshard`` also covers live resharding (array already on devices), which
+XLA implements as the minimal collective permute.
+
+Divisibility fallbacks in repro.sharding make this safe for *any* target
+mesh: a dim that no longer divides simply replicates.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh
+
+from repro import sharding as shd
+
+
+def reshard(tree, axes_tree, mesh: Mesh,
+            rules: shd.ShardingRules | None = None):
+    """device_put every leaf to its sharding under the (new) mesh."""
+    shardings = shd.tree_shardings(axes_tree, tree, mesh, rules)
+    return jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)
+
+
+def restore_elastic(manager, template, axes_tree, mesh: Mesh,
+                    step=None, rules: shd.ShardingRules | None = None):
+    """CheckpointManager.restore + resharding onto ``mesh`` in one call."""
+    shardings = shd.tree_shardings(axes_tree, template, mesh, rules)
+    return manager.restore(template, step=step, shardings=shardings)
+
+
+def validate_resharding(tree_a, tree_b) -> bool:
+    """Value equality across meshes (used by tests)."""
+    import jax.numpy as jnp
+    ok = jax.tree.map(
+        lambda a, b: bool(jnp.array_equal(jax.device_get(a),
+                                          jax.device_get(b))),
+        tree_a, tree_b)
+    return all(jax.tree.leaves(ok))

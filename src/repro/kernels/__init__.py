@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the perf-critical hot spots.
+
+  rbf_gram      — tiled (signed) RBF Gram (SODM nonlinear-kernel hot spot)
+  dual_cd_block — VMEM-tile Gauss-Southwell dual CD (TPU adaptation of Eqn. 3)
+  odm_grad      — fused single-pass linear primal ODM gradient (DSVRG)
+  flash_attn    — causal/sliding-window GQA flash attention (LM substrate)
+
+Use :mod:`repro.kernels.ops` from framework code (padding + fallbacks);
+:mod:`repro.kernels.ref` holds the pure-jnp oracles.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: fused linear-kernel primal ODM gradient.
+
+grad p(w) = w + s · Xᵀ[(lo + ups·hi) ⊙ y],  s = lam / (M (1-θ)²)
+
+where lo/hi are the two-sided margin residuals (Section 3.3). XLA lowers
+the naive expression as two passes over X (one for the margins X w, one
+for the back-projection Xᵀ coef). For DSVRG the gradient is the inner-loop
+hot spot and X is the dominant operand, so fusing both matvecs into a
+single HBM pass halves the memory traffic — the op is memory-bound
+(arithmetic intensity ≈ 2 flops/byte either way), so that is a ~2× win.
+
+Tiling: grid (M/bm,), sequential on TPU, so all cells accumulate into the
+same (1, d) output block; cell i loads its (bm, d) X slab once, computes
+margins m = X_i w (MXU), coefficients (VPU), and the partial Xᵀ coef
+(MXU), adding into the accumulator. Cell 0 initializes the accumulator
+with w (the ridge term). VMEM: bm·d + 2·d + O(bm) floats; defaults
+(bm=512, d≤8192) ≈ 16 MB fp32 upper bound — the wrapper halves bm when
+bm·d would exceed the budget.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+
+def _odm_grad_kernel(w_ref, x_ref, y_ref, out_ref, *, s: float, theta: float,
+                     ups: float):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = w_ref[...]
+
+    x = x_ref[...]                              # (bm, d)
+    w = w_ref[0, :]                             # (d,)
+    y = y_ref[0, :]                             # (bm,)
+    m = y * jax.lax.dot_general(x, w[:, None], (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)[:, 0]
+    lo = jnp.where(m < 1.0 - theta, m + theta - 1.0, 0.0)
+    hi = jnp.where(m > 1.0 + theta, m - theta - 1.0, 0.0)
+    coef = (s * (lo + ups * hi) * y).astype(x.dtype)        # (bm,)
+    part = jax.lax.dot_general(coef[None, :], x, (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)  # (1, d)
+    out_ref[...] += part.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("lam", "theta", "ups", "bm",
+                                             "interpret"))
+def odm_grad(w: Array, x: Array, y: Array, *, lam: float = 1.0,
+             theta: float = 0.1, ups: float = 0.5, bm: int = 512,
+             interpret: bool = False) -> Array:
+    """Full-batch grad p(w). Shapes must tile evenly (ops.py pads)."""
+    M, d = x.shape
+    assert M % bm == 0, (M, bm)
+    s = lam / (M * (1.0 - theta) ** 2)
+    kernel = functools.partial(_odm_grad_kernel, s=s, theta=theta, ups=ups)
+    out = pl.pallas_call(
+        kernel,
+        grid=(M // bm,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i: (0, 0)),      # w
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),     # x
+            pl.BlockSpec((1, bm), lambda i: (0, i)),     # y
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, d), w.dtype),
+        interpret=interpret,
+    )(w[None, :], x, y[None, :])
+    return out[0]

@@ -1,0 +1,155 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+These wrappers make the kernels shape-agnostic (pad to tile multiples,
+unpad the result), pick block sizes that respect the VMEM budget, and fall
+back to the pure-jnp reference on hosts where Mosaic is unavailable
+(interpret=True runs the kernel body in Python — used by all CPU tests).
+
+Use these from framework code; use the <name>.py modules directly only in
+kernel tests.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import dual_cd_block as _cd
+from repro.kernels import flash_attn as _fa
+from repro.kernels import odm_grad as _og
+from repro.kernels import rbf_gram as _rg
+from repro.kernels import ref
+
+Array = jax.Array
+
+# interpret=True on CPU hosts (tests / this container); False on real TPU.
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+def _pad_to(a: Array, axis: int, mult: int, value=0.0) -> tuple[Array, int]:
+    n = a.shape[axis]
+    target = -(-n // mult) * mult
+    if target == n:
+        return a, n
+    pad = [(0, 0)] * a.ndim
+    pad[axis] = (0, target - n)
+    return jnp.pad(a, pad, constant_values=value), n
+
+
+# ---------------------------------------------------------------------------
+# rbf gram
+# ---------------------------------------------------------------------------
+
+def rbf_gram(x: Array, z: Array, gamma: float, *, yx: Array | None = None,
+             yz: Array | None = None, bm: int = 256, bn: int = 256,
+             bd: int = 512) -> Array:
+    """(Signed) RBF Gram for arbitrary shapes; pads to tile multiples."""
+    M, D = x.shape
+    N = z.shape[0]
+    bm = min(bm, max(8, M))
+    bn = min(bn, max(8, N))
+    bd = min(bd, max(8, D))
+    xp, _ = _pad_to(x, 0, bm)
+    zp, _ = _pad_to(z, 0, bn)
+    xp, _ = _pad_to(xp, 1, bd)
+    zp, _ = _pad_to(zp, 1, bd)
+    signed = yx is not None
+    yxp = yzp = None
+    if signed:
+        yxp, _ = _pad_to(yx, 0, bm)
+        yzp, _ = _pad_to(yz if yz is not None else yx, 0, bn)
+    out = _rg.rbf_gram(xp, zp, yxp, yzp, gamma=gamma, signed=signed,
+                       bm=bm, bn=bn, bd=bd, interpret=_INTERPRET)
+    return out[:M, :N]
+
+
+# ---------------------------------------------------------------------------
+# block dual CD
+# ---------------------------------------------------------------------------
+
+def dual_cd_solve(Q: Array, *, c: float, ups: float, theta: float,
+                  mscale: float, block: int = 256, n_passes: int = 50,
+                  tol: float = 1e-5) -> tuple[Array, Array, Array]:
+    """Solve the ODM dual with the Pallas tile kernel. Pads M to the block.
+
+    Padded coordinates have zero Gram rows; their optimal value for zeta is
+    max(-(theta-1)/h, 0) > 0, so we pin them by masking after the solve —
+    correctness is unaffected because padded rows never couple (Q rows are
+    zero) and the returned alpha strips them anyway.
+    """
+    M = Q.shape[0]
+    block = min(block, M)
+    Qp, _ = _pad_to(Q, 0, block)
+    Qp, _ = _pad_to(Qp, 1, block)
+    alpha, kkt, passes = _cd.solve(
+        Qp, c=c, ups=ups, theta=theta, mscale=mscale, block=block,
+        n_passes=n_passes, tol=tol, interpret=_INTERPRET)
+    Mp = Qp.shape[0]
+    zeta, beta = alpha[:Mp], alpha[Mp:]
+    return jnp.concatenate([zeta[:M], beta[:M]]), kkt, passes
+
+
+# ---------------------------------------------------------------------------
+# fused ODM gradient
+# ---------------------------------------------------------------------------
+
+def odm_grad(w: Array, x: Array, y: Array, *, lam: float = 1.0,
+             theta: float = 0.1, ups: float = 0.5, bm: int = 512) -> Array:
+    """Fused primal gradient; pads M (zero rows have margin 0 -> inside the
+    band only if theta >= 1, so we pad y with +1 labels and w·0 = 0 margin
+    => lo = theta - 1 < 0 contributes coef on a zero row: harmless since
+    the x row is zero => contributes nothing to Xᵀcoef)."""
+    M, d = x.shape
+    bm_eff = min(bm, M)
+    # shrink bm so the (bm, d) slab stays under ~8 MB fp32
+    while bm_eff > 8 and bm_eff * d * 4 > 8 * 2 ** 20:
+        bm_eff //= 2
+    xp, _ = _pad_to(x, 0, bm_eff)
+    yp, _ = _pad_to(y, 0, bm_eff, value=1.0)
+    # padded rows are all-zero in x => contribute nothing; but they do not
+    # change s either (s uses the true M), so pass lam scaled to true M.
+    out = _og.odm_grad(w, xp, yp, lam=lam * xp.shape[0] / M, theta=theta,
+                       ups=ups, bm=bm_eff, interpret=_INTERPRET)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                    window: int | None = None, scale: float | None = None,
+                    bq: int = 512, bk: int = 512) -> Array:
+    """Flash attention with T/S padding. Padded kv positions are masked by
+    the causal bound (they sit beyond the last real query's reach) when
+    causal=True; for non-causal we pad k with -inf-like zeros and rely on
+    the caller to not use non-causal with ragged S (asserted)."""
+    B, Hq, T, D = q.shape
+    S = k.shape[2]
+    bq = min(bq, T)
+    bk = min(bk, S)
+    if T % bq == 0 and S % bk == 0:
+        return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                                   scale=scale, bq=bq, bk=bk,
+                                   interpret=_INTERPRET)
+    if not causal or T != S:
+        # ragged non-self-attention: padding shifts the causal alignment
+        # (q_offset = S - T must be preserved); use the reference — this
+        # path only occurs for tiny smoke shapes, never in production
+        # configs (which are tile-aligned by construction).
+        return ref.mha(q, k, v, causal=causal, window=window, scale=scale)
+    bq = bk = min(bq, bk)
+    qp, _ = _pad_to(q, 2, bq)
+    kp, _ = _pad_to(k, 2, bk)
+    vp, _ = _pad_to(v, 2, bk)
+    # equal pads on q and kv keep q_offset = 0; padded kv positions sit
+    # beyond every real query's causal reach, so they are masked out.
+    out = _fa.flash_attention(qp, kp, vp, causal=causal, window=window,
+                              scale=scale, bq=bq, bk=bk,
+                              interpret=_INTERPRET)
+    return out[:, :, :T, :]
+
+
+# re-export oracles for convenience
+reference = ref

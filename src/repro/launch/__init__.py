@@ -1,0 +1,2 @@
+# Launchers import lazily — repro.launch.dryrun must set XLA_FLAGS before
+# jax initializes, so nothing here may import jax at module load.

@@ -1,0 +1,89 @@
+"""Serving launcher: prefill + batched decode with static caches.
+
+Demonstrates the full serving path: prompt prefill fills the per-layer
+caches (KV ring buffers for windowed layers, SSM/RG-LRU states for
+recurrent layers), then a jit'd decode step generates tokens
+autoregressively for the whole batch. Greedy or temperature sampling.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b \
+      --prompt-len 32 --gen 16 --batch 4
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=0)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--full-config", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    from repro import configs
+    from repro.models import model as M
+    from repro.train import steps as steps_mod
+
+    cfg = (configs.get if args.full_config else configs.get_smoke)(args.arch)
+    max_len = args.max_len or (args.prompt_len + args.gen)
+
+    key = jax.random.PRNGKey(args.seed)
+    params, _ = M.init_params(key, cfg)
+
+    B = args.batch
+    toks = jax.random.randint(jax.random.fold_in(key, 1),
+                              (B, args.prompt_len), 0, cfg.vocab)
+    batch = {"tokens": toks}
+    if cfg.rope_kind == "mrope":
+        pos = jnp.broadcast_to(jnp.arange(args.prompt_len),
+                               (B, args.prompt_len))
+        batch["pos3"] = jnp.stack([pos, pos, pos])
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            jax.random.fold_in(key, 2),
+            (B, cfg.encoder.frontend_len, cfg.encoder.frontend_dim),
+            jnp.bfloat16)
+
+    t0 = time.time()
+    prefill = jax.jit(steps_mod.make_prefill(cfg, max_len=max_len))
+    logits, cache = prefill(params, batch)
+    print(f"[serve] prefill {args.prompt_len} tokens x{B}: "
+          f"{time.time() - t0:.2f}s")
+
+    decode = jax.jit(steps_mod.make_serve_step(cfg))
+    out_tokens = []
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+    t0 = time.time()
+    for t in range(args.gen):
+        pos = jnp.int32(args.prompt_len + t)
+        dbatch = {"tokens": tok, "pos": pos}
+        if cfg.rope_kind == "mrope":
+            p3 = jnp.broadcast_to(pos, (B, 1))
+            dbatch["pos3"] = jnp.stack([p3, p3, p3])
+        logits, cache = decode(params, cache, dbatch)
+        if args.temperature > 0:
+            tok = jax.random.categorical(
+                jax.random.fold_in(key, 100 + t),
+                logits[:, -1] / args.temperature, axis=-1)[:, None]
+        else:
+            tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        out_tokens.append(tok)
+    gen = jnp.concatenate(out_tokens, axis=1)
+    dt = time.time() - t0
+    print(f"[serve] generated {args.gen} tokens x{B} in {dt:.2f}s "
+          f"({args.gen * B / max(dt, 1e-9):.1f} tok/s)")
+    print(f"[serve] sample row 0: {gen[0].tolist()}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,120 @@
+"""Training launcher: end-to-end LM training with the full runtime.
+
+Wires together: config registry -> mesh + logical shardings -> synthetic
+data pipeline -> jit'd train step (remat, optional grad accum /
+compression) -> checkpoint manager (async, atomic, retention) ->
+restart/resume (--resume restores params/opt/step and the data cursor).
+
+CPU-scale by default (smoke config + host mesh); pass --full-config to
+use the published architecture (needs a real pod). This is the same code
+path the dry-run lowers — launching on hardware only changes the mesh.
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --arch granite-8b --steps 50
+  PYTHONPATH=src python -m repro.launch.train --arch dbrx-132b \
+      --steps 100 --ckpt-dir /tmp/ckpt --resume
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--compress", default="none",
+                    choices=["none", "topk", "int8"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--full-config", action="store_true")
+    ap.add_argument("--mesh", default=None,
+                    help="e.g. '2x4' to build a (data, model) host mesh")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    from repro import configs, sharding
+    from repro.data import lm as lmdata
+    from repro.distributed.checkpoint import CheckpointManager
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import model as M
+    from repro.optim import adamw, compress
+    from repro.train import steps as steps_mod
+
+    cfg = (configs.get if args.full_config else configs.get_smoke)(args.arch)
+    mesh = None
+    if args.mesh:
+        d, m = (int(x) for x in args.mesh.split("x"))
+        mesh = make_host_mesh((d, m), ("data", "model"))
+
+    tc = steps_mod.TrainConfig(
+        optimizer=adamw.AdamWConfig(lr=args.lr, warmup_steps=10,
+                                    total_steps=args.steps),
+        compression=compress.CompressConfig(codec=args.compress),
+        grad_accum=args.grad_accum)
+    use_ef = args.compress != "none"
+
+    params, axes = M.init_params(jax.random.PRNGKey(args.seed), cfg)
+    state = steps_mod.TrainState.create(params, use_ef=use_ef)
+
+    step_fn = steps_mod.make_train_step(cfg, tc)
+    if mesh is not None:
+        state_axes = steps_mod.TrainState.axes(axes, use_ef=use_ef)
+        state_sh = sharding.tree_shardings(state_axes, state, mesh)
+        state = jax.tree.map(lambda x, s: jax.device_put(x, s), state,
+                             state_sh)
+
+        def wrapped(st, b):
+            with sharding.use_mesh(mesh):
+                return step_fn(st, b)
+
+        jstep = jax.jit(wrapped, in_shardings=(state_sh, None),
+                        out_shardings=(state_sh, None))
+    else:
+        jstep = jax.jit(step_fn)
+
+    start_step = 0
+    mgr = None
+    if args.ckpt_dir:
+        mgr = CheckpointManager(args.ckpt_dir, keep=3)
+        if args.resume and mgr.latest_step() is not None:
+            meta = mgr.metadata()
+            start_step = int(meta["metadata"].get("data_step",
+                                                  meta["step"]))
+            state = mgr.restore(state)
+            print(f"[train] resumed from step {start_step}")
+
+    dc = lmdata.LMDataConfig(vocab=cfg.vocab, seq_len=args.seq_len,
+                             global_batch=args.global_batch, seed=args.seed)
+
+    t0 = time.time()
+    for step in range(start_step, args.steps):
+        batch = lmdata.batch_at(dc, step)
+        state, metrics = jstep(state, batch)
+        if step % 5 == 0 or step == args.steps - 1:
+            print(f"[train] step {step:5d} loss {float(metrics['loss']):.4f}"
+                  f" gnorm {float(metrics['grad_norm']):.3f}"
+                  f" lr {float(metrics['lr']):.2e}"
+                  f" {time.time() - t0:.1f}s", flush=True)
+        if mgr is not None and (step + 1) % args.ckpt_every == 0:
+            mgr.save_async(step + 1, state, {"data_step": step + 1,
+                                             "arch": args.arch})
+    if mgr is not None:
+        mgr.wait()
+        mgr.save(args.steps, state, {"data_step": args.steps,
+                                     "arch": args.arch})
+        print(f"[train] final checkpoint at step {args.steps}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

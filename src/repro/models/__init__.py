@@ -1,0 +1,6 @@
+"""LM substrate: the 10 assigned architectures as pure-function models."""
+from repro.models import (attention, layers, mamba, model, moe, rglru,
+                          transformer)
+
+__all__ = ["attention", "layers", "mamba", "model", "moe", "rglru",
+           "transformer"]

@@ -1,0 +1,212 @@
+"""Primitive layers: norms, projections, embeddings, RoPE/M-RoPE, MLPs.
+
+Parameters are plain dict pytrees; every init function returns
+``(params, axes)`` where ``axes`` mirrors ``params`` with tuples of
+*logical* axis names consumed by repro.sharding. No framework dependency
+(flax-free) so everything works identically under jit / shard_map / scan.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+
+Array = jax.Array
+PyTree = Any
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+# -- precision boundary -------------------------------------------------------
+# Sublayer outputs are the tensors the SPMD partitioner all-reduces (TP
+# partial sums) / all-gathers (block-boundary reshards). XLA hoists the
+# bf16->f32 converts of downstream fp32 consumers (norms, loss) ABOVE
+# those collectives, silently doubling wire bytes (measured on dbrx /
+# qwen2-vl: the top all-reduces were f32 activations). This boundary pins
+# the compute dtype on both sides: an optimization_barrier stops convert
+# hoisting in the forward, and the custom VJP rounds cotangents back to
+# the activation dtype (the standard mixed-precision contract) with its
+# own barrier for the backward collectives.
+
+@jax.custom_vjp
+def precision_boundary(y: Array) -> Array:
+    return jax.lax.optimization_barrier(y)
+
+
+def _pb_fwd(y):
+    # residual: a zero-size array carrying the activation dtype (dtypes
+    # themselves are not valid JAX residuals)
+    return jax.lax.optimization_barrier(y), jnp.zeros((0,), y.dtype)
+
+
+def _pb_bwd(proto, ct):
+    return (jax.lax.optimization_barrier(ct.astype(proto.dtype)),)
+
+
+precision_boundary.defvjp(_pb_fwd, _pb_bwd)
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_dim: int, dtype, axes=("embed", "mlp"),
+               bias: bool = False):
+    scale = in_dim ** -0.5
+    p = {"w": jax.random.normal(key, (in_dim, out_dim), dtype) * scale}
+    a = {"w": axes}
+    if bias:
+        p["b"] = jnp.zeros((out_dim,), dtype)
+        a["b"] = (axes[1],)
+    return p, a
+
+
+def dense_shape(in_dim: int, out_dim: int, dtype, axes=("embed", "mlp"),
+                bias: bool = False):
+    """ShapeDtypeStruct twin of dense_init (dry-run, no allocation)."""
+    p = {"w": jax.ShapeDtypeStruct((in_dim, out_dim), dtype)}
+    a = {"w": axes}
+    if bias:
+        p["b"] = jax.ShapeDtypeStruct((out_dim,), dtype)
+        a["b"] = (axes[1],)
+    return p, a
+
+
+def apply_dense(p, x: Array, compute_dtype) -> Array:
+    w = p["w"].astype(compute_dtype)
+    y = x @ w
+    if "b" in p:
+        y = y + p["b"].astype(compute_dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def norm_init(dim: int, kind: str, dtype):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((dim,), dtype)}, {"scale": ("embed",)}
+    return ({"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)},
+            {"scale": ("embed",), "bias": ("embed",)})
+
+
+def apply_norm(p, x: Array, kind: str, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def qk_norm_init(dh: int, dtype):
+    return ({"q_scale": jnp.ones((dh,), dtype), "k_scale": jnp.ones((dh,), dtype)},
+            {"q_scale": ("head_dim",), "k_scale": ("head_dim",)})
+
+
+def apply_head_rmsnorm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    """RMS norm over the trailing head_dim (qwen3 qk_norm)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+# ---------------------------------------------------------------------------
+
+def embed_init(key, vocab: int, dim: int, dtype):
+    # d^-0.5 keeps tied-unembed logits O(1) at init (loss starts ~ log V)
+    p = {"table": jax.random.normal(key, (vocab, dim), dtype) * dim ** -0.5}
+    return p, {"table": ("vocab", "embed")}
+
+
+def apply_embed(p, ids: Array, compute_dtype) -> Array:
+    return p["table"].astype(compute_dtype)[ids]
+
+
+def apply_unembed(p, x: Array, compute_dtype) -> Array:
+    """Tied output head: logits = x @ tableᵀ."""
+    return x @ p["table"].astype(compute_dtype).T
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(dh: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, dh, 2, dtype=jnp.float32) / dh))
+
+
+def apply_rope(x: Array, pos: Array, theta: float) -> Array:
+    """x (..., S, H, dh); pos (..., S) int32 positions."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                        # (dh/2,)
+    angles = pos[..., None].astype(jnp.float32) * freqs  # (..., S, dh/2)
+    cos = jnp.cos(angles)[..., None, :]                  # (..., S, 1, dh/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: Array, pos3: Array, theta: float, sections: tuple) -> Array:
+    """Qwen2-VL M-RoPE. x (B, S, H, dh); pos3 (3, B, S) temporal/h/w ids.
+
+    The dh/2 frequency slots are split into ``sections`` (t, h, w); each
+    section rotates by its own position stream.
+    """
+    dh = x.shape[-1]
+    assert sum(sections) == dh // 2, (sections, dh)
+    freqs = rope_freqs(dh, theta)                        # (dh/2,)
+    # per-frequency-slot stream id (t/h/w), then gather the position stream
+    sec_id = jnp.repeat(jnp.arange(3), jnp.array(sections),
+                        total_repeat_length=dh // 2)     # (dh/2,)
+    pos_sel = jnp.moveaxis(jnp.take(pos3, sec_id, axis=0), 0, -1)  # (B,S,dh/2)
+    angles = pos_sel.astype(jnp.float32) * freqs         # (B, S, dh/2)
+    cos = jnp.cos(angles)[..., None, :]                  # (B, S, 1, dh/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int, act: str, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if act == "silu":                                    # SwiGLU: 3 matrices
+        p = {"wi": dense_init(k1, d_model, d_ff, dtype)[0],
+             "wg": dense_init(k2, d_model, d_ff, dtype)[0],
+             "wo": dense_init(k3, d_ff, d_model, dtype)[0]}
+        a = {"wi": {"w": ("embed", "mlp")}, "wg": {"w": ("embed", "mlp")},
+             "wo": {"w": ("mlp", "embed")}}
+    else:                                                # plain 2-mat GELU
+        p = {"wi": dense_init(k1, d_model, d_ff, dtype)[0],
+             "wo": dense_init(k3, d_ff, d_model, dtype)[0]}
+        a = {"wi": {"w": ("embed", "mlp")}, "wo": {"w": ("mlp", "embed")}}
+    return p, a
+
+
+def apply_mlp(p, x: Array, act: str, compute_dtype) -> Array:
+    if act == "silu":
+        h = jax.nn.silu(apply_dense(p["wg"], x, compute_dtype)) * \
+            apply_dense(p["wi"], x, compute_dtype)
+    else:
+        h = jax.nn.gelu(apply_dense(p["wi"], x, compute_dtype))
+    h = sharding.constrain(h, ("batch", "seq", "mlp"))
+    return apply_dense(p["wo"], h, compute_dtype)

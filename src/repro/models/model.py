@@ -1,0 +1,248 @@
+"""Top-level model: embeddings + stack(s) + head, for all 10 architectures.
+
+Public surface (everything pure functions over param pytrees):
+
+  init_params(key, cfg)        -> (params, axes)          [smoke tests]
+  param_shapes(cfg)            -> (ShapeDtypeStruct tree, axes)  [dry-run]
+  loss_fn(params, batch, cfg)  -> (loss, aux-metrics)     [train_step]
+  prefill(params, batch, cfg)  -> (last_logits, cache)    [serving]
+  decode(params, cache, tok, pos, cfg) -> (logits, cache) [serving]
+  input_specs(cfg, shape)      -> batch of ShapeDtypeStructs [dry-run]
+
+Input conventions per family:
+  dense/moe/ssm/hybrid: {"tokens": (B,S) i32, "labels": (B,S) i32}
+  vlm:    + {"pos3": (3,B,S) i32}  (M-RoPE streams; the vision frontend is
+            a stub — tokens already include patch-embedding positions)
+  encdec: + {"frames": (B,L_enc,D) bf16} precomputed frontend embeddings
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import layers as L, transformer as T
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ArchConfig):
+    dtype = L.dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    p: dict = {}
+    a: dict = {}
+    p["embed"], a["embed"] = L.embed_init(ks[0], cfg.padded_vocab,
+                                          cfg.d_model, dtype)
+    p["stack"], a["stack"] = T.init_stack(ks[1], cfg, dtype,
+                                          cross=cfg.family == "encdec")
+    p["final_norm"], a["final_norm"] = L.norm_init(cfg.d_model,
+                                                   cfg.norm_kind, dtype)
+    if not cfg.tie_embeddings:
+        p["unembed"], a["unembed"] = L.dense_init(
+            ks[2], cfg.d_model, cfg.padded_vocab, dtype,
+            axes=("embed", "vocab"))
+    if cfg.family == "encdec":
+        enc = cfg.encoder
+        p["enc_in"], a["enc_in"] = L.dense_init(
+            ks[3], enc.frontend_dim, cfg.d_model, dtype,
+            axes=(None, "embed"))
+        enc_cfg = _encoder_cfg(cfg)
+        p["encoder"], a["encoder"] = T.init_stack(ks[4], enc_cfg, dtype)
+        p["enc_norm"], a["enc_norm"] = L.norm_init(cfg.d_model,
+                                                   cfg.norm_kind, dtype)
+    return p, a
+
+
+def _encoder_cfg(cfg: ArchConfig) -> ArchConfig:
+    import dataclasses
+    return dataclasses.replace(cfg, family="dense",
+                               n_layers=cfg.encoder.n_layers,
+                               moe=None, ssm=None, rglru=None, encoder=None)
+
+
+def param_shapes(cfg: ArchConfig):
+    """(ShapeDtypeStruct tree, axes) without allocating anything.
+
+    init_params runs under eval_shape (params become ShapeDtypeStructs,
+    nothing is allocated); the axes tree is pure static Python, captured
+    via closure.
+    """
+    captured = {}
+
+    def thunk():
+        p, a = init_params(jax.random.PRNGKey(0), cfg)
+        captured["axes"] = a
+        return p
+
+    shapes = jax.eval_shape(thunk)
+    return shapes, captured["axes"]
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+def _compute_dtype(cfg: ArchConfig):
+    return L.dtype_of(cfg.compute_dtype)
+
+
+def _encode(p, frames: Array, cfg: ArchConfig, impl: str):
+    cdt = _compute_dtype(cfg)
+    enc_cfg = _encoder_cfg(cfg)
+    x = L.apply_dense(p["enc_in"], frames.astype(cdt), cdt)
+    pos = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+    x, _ = T.apply_stack(p["encoder"], x, enc_cfg, pos=pos, causal=False,
+                         impl=impl, compute_dtype=cdt)
+    return L.apply_norm(p["enc_norm"], x, cfg.norm_kind)
+
+
+def logits_fn(p, batch: dict, cfg: ArchConfig, *, impl: str = "flash_xla"):
+    """Full-sequence logits (B, S, padded_vocab) + aux loss."""
+    cdt = _compute_dtype(cfg)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = L.apply_embed(p["embed"], tokens, cdt)
+    x = sharding.constrain(x, ("batch", "seq", "embed"))
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    pos3 = batch.get("pos3")
+    memory = None
+    if cfg.family == "encdec":
+        memory = _encode(p, batch["frames"], cfg, impl)
+    x, aux = T.apply_stack(p["stack"], x, cfg, pos=pos, pos3=pos3,
+                           memory=memory, impl=impl, compute_dtype=cdt)
+    x = L.apply_norm(p["final_norm"], x, cfg.norm_kind)
+    logits = _head(p, x, cfg, cdt)
+    logits = sharding.constrain(logits, ("batch", "seq", "vocab"))
+    return logits, aux
+
+
+def _head(p, x, cfg: ArchConfig, cdt):
+    if cfg.tie_embeddings:
+        return L.apply_unembed(p["embed"], x, cdt)
+    return L.apply_dense(p["unembed"], x, cdt)
+
+
+def loss_fn(p, batch: dict, cfg: ArchConfig, *, impl: str = "flash_xla",
+            aux_weight: float = 0.01):
+    """Causal-LM cross entropy (+ MoE aux). Returns (loss, metrics)."""
+    logits, aux = logits_fn(p, batch, cfg, impl=impl)
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    # gold logit via one-hot contraction: unlike take_along_axis this keeps
+    # the (sharded) vocab dim contracted locally + a tiny psum, instead of
+    # all-gathering the full logits to every device.
+    onehot = jax.nn.one_hot(jnp.maximum(labels, 0), logits.shape[-1],
+                            dtype=logits.dtype)
+    gold = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    nll = logz - gold
+    mask = (labels >= 0).astype(jnp.float32)
+    nll = jnp.where(labels >= 0, nll, 0.0)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(nll) / denom
+    total = loss + aux_weight * aux
+    return total, {"nll": loss, "aux": aux,
+                   "ppl_proxy": jnp.exp(jnp.minimum(loss, 20.0))}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def prefill(p, batch: dict, cfg: ArchConfig, *, max_len: int,
+            impl: str = "flash_xla"):
+    """Process the prompt; returns (last-token logits, stacked cache)."""
+    cdt = _compute_dtype(cfg)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = L.apply_embed(p["embed"], tokens, cdt)
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    pos3 = batch.get("pos3")
+    memory = None
+    if cfg.family == "encdec":
+        memory = _encode(p, batch["frames"], cfg, impl)
+    x, cache = T.apply_stack_prefill(p["stack"], x, cfg, pos=pos,
+                                     max_len=max_len, pos3=pos3,
+                                     memory=memory, impl=impl,
+                                     compute_dtype=cdt)
+    x = L.apply_norm(p["final_norm"], x[:, -1:], cfg.norm_kind)
+    logits = _head(p, x, cfg, cdt)
+    return logits, cache
+
+
+def decode(p, cache, tokens: Array, pos: Array, cfg: ArchConfig, *,
+           pos3: Optional[Array] = None):
+    """One decode step. tokens (B, 1); pos () current absolute position.
+
+    Returns (logits (B, 1, V), new cache)."""
+    cdt = _compute_dtype(cfg)
+    x = L.apply_embed(p["embed"], tokens, cdt)
+    x = sharding.constrain(x, ("batch", None, "embed"))
+    x, cache = T.apply_stack_decode(p["stack"], cache, x, cfg, pos=pos,
+                                    pos3=pos3, compute_dtype=cdt)
+    x = L.apply_norm(p["final_norm"], x, cfg.norm_kind)
+    logits = _head(p, x, cfg, cdt)
+    logits = sharding.constrain(logits, ("batch", None, "vocab"))
+    return logits, cache
+
+
+def cache_shapes(cfg: ArchConfig, batch: int, max_len: int):
+    cross_len = cfg.encoder.frontend_len if cfg.family == "encdec" else 0
+    return T.stack_cache_shape(cfg, batch, max_len, cross_len=cross_len)
+
+
+# ---------------------------------------------------------------------------
+# dry-run input specs
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of the cell."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        batch = {"tokens": sds((B, S), i32), "labels": sds((B, S), i32)}
+        if cfg.rope_kind == "mrope":
+            batch["pos3"] = sds((3, B, S), i32)
+        if cfg.family == "encdec":
+            batch["frames"] = sds((B, cfg.encoder.frontend_len,
+                                   cfg.encoder.frontend_dim), jnp.bfloat16)
+        return batch
+    if shape.kind == "prefill":
+        batch = {"tokens": sds((B, S), i32)}
+        if cfg.rope_kind == "mrope":
+            batch["pos3"] = sds((3, B, S), i32)
+        if cfg.family == "encdec":
+            batch["frames"] = sds((B, cfg.encoder.frontend_len,
+                                   cfg.encoder.frontend_dim), jnp.bfloat16)
+        return batch
+    # decode: one new token against an S-long cache
+    batch = {"tokens": sds((B, 1), i32), "pos": sds((), i32)}
+    if cfg.rope_kind == "mrope":
+        batch["pos3"] = sds((3, B, 1), i32)
+    return batch
+
+
+def batch_axes(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    """Logical axes for the input batch (for in_shardings)."""
+    if shape.kind in ("train", "prefill"):
+        axes = {"tokens": ("batch", None)}
+        if shape.kind == "train":
+            axes["labels"] = ("batch", None)
+        if cfg.rope_kind == "mrope":
+            axes["pos3"] = (None, "batch", None)
+        if cfg.family == "encdec":
+            axes["frames"] = ("batch", None, None)
+        return axes
+    axes = {"tokens": ("batch", None), "pos": ()}
+    if cfg.rope_kind == "mrope":
+        axes["pos3"] = (None, "batch", None)
+    return axes

@@ -1,0 +1,144 @@
+"""RG-LRU recurrent block (recurrentgemma-9b / Griffin, arXiv:2402.19427).
+
+Recurrent block (the "rec" element of the (rec, rec, attn) pattern):
+
+  x -> [branch 1] linear (d -> w) -> causal conv1d (width 4) -> RG-LRU
+       [branch 2] linear (d -> w) -> GeLU
+  out = (branch1 * branch2) -> linear (w -> d)
+
+RG-LRU cell (diagonal gated linear recurrence):
+
+  r_t = sigmoid(W_a x_t + b_a)          recurrence gate
+  i_t = sigmoid(W_x x_t + b_x)          input gate
+  a_t = exp(c * softplus(Λ) * (-r_t))   per-channel decay, Λ learned, c=8
+  h_t = a_t h_{t-1} + sqrt(1 - a_t²) · (i_t ⊙ x_t)
+
+Training/prefill uses jax.lax.associative_scan over the full sequence
+(state is (B, w) per step — no Mamba-style N-dim blow-up, so no chunking
+is needed). Decode is the exact one-step recurrence: O(1) state, which is
+why recurrentgemma runs the long_500k cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+
+Array = jax.Array
+
+_C = 8.0      # Griffin's fixed decay temperature
+
+
+def width(cfg: ArchConfig) -> int:
+    return cfg.rglru.lru_width or cfg.d_model
+
+
+def init(key, cfg: ArchConfig, dtype):
+    w = width(cfg)
+    ks = jax.random.split(key, 6)
+    scale = cfg.d_model ** -0.5
+    p = {
+        "in_x": {"w": jax.random.normal(ks[0], (cfg.d_model, w), dtype) * scale},
+        "in_gate": {"w": jax.random.normal(ks[1], (cfg.d_model, w), dtype) * scale},
+        "conv": {"w": jax.random.normal(ks[2], (cfg.rglru.conv, w), dtype) * 0.1,
+                 "b": jnp.zeros((w,), dtype)},
+        "gate_a": {"w": jax.random.normal(ks[3], (w, w), dtype) * w ** -0.5,
+                   "b": jnp.zeros((w,), dtype)},
+        "gate_x": {"w": jax.random.normal(ks[4], (w, w), dtype) * w ** -0.5,
+                   "b": jnp.zeros((w,), dtype)},
+        # Λ init so that a ≈ uniform(0.9, 0.999) at r = 1 (Griffin A.2)
+        "lam": jnp.log(jnp.expm1(
+            -jnp.log(jnp.linspace(0.9, 0.999, w)) / _C)).astype(dtype),
+        "out": {"w": jax.random.normal(ks[5], (w, cfg.d_model), dtype) * w ** -0.5},
+    }
+    a = {
+        "in_x": {"w": ("embed", "mlp")},
+        "in_gate": {"w": ("embed", "mlp")},
+        "conv": {"w": ("conv", "mlp"), "b": ("mlp",)},
+        "gate_a": {"w": ("mlp", None), "b": ("mlp",)},
+        "gate_x": {"w": ("mlp", None), "b": ("mlp",)},
+        "lam": ("mlp",),
+        "out": {"w": ("mlp", "embed")},
+    }
+    return p, a
+
+
+def _lru_coeffs(p, xc: Array):
+    """Per-step (a_t, b_t) of the diagonal recurrence, from conv output xc."""
+    r = jax.nn.sigmoid(xc @ p["gate_a"]["w"].astype(xc.dtype)
+                       + p["gate_a"]["b"].astype(xc.dtype))
+    i = jax.nn.sigmoid(xc @ p["gate_x"]["w"].astype(xc.dtype)
+                       + p["gate_x"]["b"].astype(xc.dtype))
+    lam = jax.nn.softplus(p["lam"].astype(jnp.float32))
+    log_a = -_C * lam * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) computed stably via expm1
+    gate = jnp.sqrt(jnp.maximum(-jnp.expm1(2.0 * log_a), 1e-12))
+    b = gate * (i.astype(jnp.float32) * xc.astype(jnp.float32))
+    return a, b
+
+
+def forward(p, x: Array, cfg: ArchConfig, compute_dtype) -> Array:
+    """Full-sequence recurrent block (train / prefill)."""
+    B, T, D = x.shape
+    xb = L.apply_dense(p["in_x"], x, compute_dtype)       # (B, T, w)
+    g = jax.nn.gelu(L.apply_dense(p["in_gate"], x, compute_dtype))
+    xc = _causal_conv(xb, p["conv"], compute_dtype)
+    xc = sharding.constrain(xc, ("batch", "seq", "mlp"))
+    a, b = _lru_coeffs(p, xc)                             # (B, T, w) fp32
+
+    def op(l, r_):
+        al, bl = l
+        ar, br = r_
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(op, (a, b), axis=1)
+    y = h.astype(compute_dtype) * g
+    return L.apply_dense(p["out"], y, compute_dtype)
+
+
+def _causal_conv(xb: Array, pc, compute_dtype) -> Array:
+    K = pc["w"].shape[0]
+    w = pc["w"].astype(compute_dtype)
+    pads = jnp.pad(xb, ((0, 0), (K - 1, 0), (0, 0)))
+    y = sum(pads[:, k:k + xb.shape[1], :] * w[k] for k in range(K))
+    return y + pc["b"].astype(compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_state(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16):
+    w = width(cfg)
+    p = {"h": jnp.zeros((batch, w), jnp.float32),
+         "conv": jnp.zeros((batch, cfg.rglru.conv - 1, w), dtype)}
+    a = {"h": ("batch", "mlp"), "conv": ("batch", None, "mlp")}
+    return p, a
+
+
+def state_shape(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16):
+    w = width(cfg)
+    sds = jax.ShapeDtypeStruct
+    p = {"h": sds((batch, w), jnp.float32),
+         "conv": sds((batch, cfg.rglru.conv - 1, w), dtype)}
+    a = {"h": ("batch", "mlp"), "conv": ("batch", None, "mlp")}
+    return p, a
+
+
+def decode_step(p, state, x: Array, cfg: ArchConfig, compute_dtype):
+    """One-token step. x (B, 1, D) -> (out (B, 1, D), new state)."""
+    xb = L.apply_dense(p["in_x"], x[:, 0], compute_dtype)   # (B, w)
+    g = jax.nn.gelu(L.apply_dense(p["in_gate"], x[:, 0], compute_dtype))
+    hist = jnp.concatenate([state["conv"].astype(compute_dtype),
+                            xb[:, None]], axis=1)
+    wconv = p["conv"]["w"].astype(compute_dtype)
+    xc = jnp.einsum("bkd,kd->bd", hist, wconv) + p["conv"]["b"].astype(compute_dtype)
+    a, b = _lru_coeffs(p, xc)
+    h = a * state["h"] + b
+    y = h.astype(compute_dtype) * g
+    out = L.apply_dense(p["out"], y, compute_dtype)[:, None]
+    return out, {"h": h, "conv": hist[:, 1:].astype(state["conv"].dtype)}

@@ -1,0 +1,470 @@
+"""Layer stacks: pattern-aware scan super-blocks for all 10 architectures.
+
+Every architecture reduces to a *pattern* ``(unit, reps, tail)`` from
+ArchConfig.layer_pattern():
+
+  dense / moe / vlm      unit=("attn",)                     reps=n_layers
+  llama4-scout (iRoPE)   unit=("attn_window",)*3+("attn_global",)  reps=12
+  falcon-mamba           unit=("ssm",)                      reps=64
+  recurrentgemma         unit=("rec","rec","attn")          reps=12, tail=(rec,rec)
+
+Parameters of each unit position are stacked across reps on a leading
+"repeats" axis and consumed by one ``lax.scan`` (MaxText-style: compile
+time is O(|unit|), not O(n_layers)). The remainder ``tail`` is unrolled.
+Remat wraps the scan body per cfg.remat.
+
+The same machinery runs three modes:
+  train/``forward``  — full sequence, no caches;
+  ``prefill``        — full sequence, returns per-layer caches (stacked);
+  ``decode``         — one token against the stacked caches.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.configs.base import ArchConfig
+from repro.models import attention, layers as L, mamba, moe as moe_mod, rglru
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# single-layer init / apply
+# ---------------------------------------------------------------------------
+
+def init_layer(key, kind: str, cfg: ArchConfig, dtype, cross: bool = False):
+    """One layer's params+axes for the given kind."""
+    ks = jax.random.split(key, 4)
+    p: dict = {}
+    a: dict = {}
+    p["ln1"], a["ln1"] = L.norm_init(cfg.d_model, cfg.norm_kind, dtype)
+    if kind in ("attn", "attn_window", "attn_global"):
+        p["attn"], a["attn"] = attention.init(ks[0], cfg, dtype)
+    elif kind == "ssm":
+        p["ssm"], a["ssm"] = mamba.init(ks[0], cfg, dtype)
+        return p, a                     # mamba block: no separate MLP
+    elif kind == "rec":
+        p["rec"], a["rec"] = rglru.init(ks[0], cfg, dtype)
+    else:
+        raise ValueError(kind)
+    if cross:
+        p["lnx"], a["lnx"] = L.norm_init(cfg.d_model, cfg.norm_kind, dtype)
+        p["cross"], a["cross"] = attention.init(ks[2], cfg, dtype, cross=True)
+    p["ln2"], a["ln2"] = L.norm_init(cfg.d_model, cfg.norm_kind, dtype)
+    if cfg.moe is not None and kind.startswith("attn"):
+        p["moe"], a["moe"] = moe_mod.init(ks[1], cfg, dtype)
+    else:
+        p["mlp"], a["mlp"] = L.mlp_init(ks[1], cfg.d_model, cfg.d_ff,
+                                        cfg.act, dtype)
+    return p, a
+
+
+def _kind_attn_opts(kind: str, cfg: ArchConfig):
+    """(window, use_rope) per layer kind."""
+    if kind == "attn_window":
+        return cfg.attn_window, True
+    if kind == "attn_global":
+        return None, False              # llama4 NoPE global layers
+    if kind == "attn" and cfg.rglru is not None:
+        return cfg.rglru.window, True   # recurrentgemma local attention
+    return None, True
+
+
+def apply_layer(p, x: Array, kind: str, cfg: ArchConfig, *, pos: Array,
+                pos3: Optional[Array] = None, memory: Optional[Array] = None,
+                causal: bool = True, impl: str = "flash_xla",
+                compute_dtype=jnp.bfloat16):
+    """Train/prefill-mode layer. Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = L.apply_norm(p["ln1"], x, cfg.norm_kind)
+    if kind == "ssm":
+        x = x + L.precision_boundary(
+            mamba.forward(p["ssm"], h, cfg, compute_dtype))
+        return x, aux
+    if kind == "rec":
+        x = x + L.precision_boundary(
+            rglru.forward(p["rec"], h, cfg, compute_dtype))
+    else:
+        window, use_rope = _kind_attn_opts(kind, cfg)
+        y = attention.forward(p["attn"], h, cfg, pos=pos, causal=causal,
+                              window=window, use_rope=use_rope,
+                              pos3=pos3, impl=impl,
+                              compute_dtype=compute_dtype)
+        from jax.ad_checkpoint import checkpoint_name
+        y = checkpoint_name(L.precision_boundary(y), "attn_out")
+        x = x + y
+    if "cross" in p and memory is not None:
+        hx = L.apply_norm(p["lnx"], x, cfg.norm_kind)
+        x = x + L.precision_boundary(
+            attention.forward(p["cross"], hx, cfg, pos=pos, causal=False,
+                              memory=memory, use_rope=False,
+                              impl=impl, compute_dtype=compute_dtype))
+    h2 = L.apply_norm(p["ln2"], x, cfg.norm_kind)
+    if "moe" in p:
+        y, aux = moe_mod.forward(p["moe"], h2, cfg, compute_dtype)
+        x = x + L.precision_boundary(y)
+    else:
+        x = x + L.precision_boundary(
+            L.apply_mlp(p["mlp"], h2, cfg.act, compute_dtype))
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# caches (per layer kind)
+# ---------------------------------------------------------------------------
+
+def layer_cache_shape(kind: str, cfg: ArchConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16, cross_len: int = 0):
+    """ShapeDtypeStruct cache pytree + logical axes for one layer."""
+    if kind == "ssm":
+        return mamba.state_shape(cfg, batch, dtype)
+    if kind == "rec":
+        return rglru.state_shape(cfg, batch, dtype)
+    window, _ = _kind_attn_opts(kind, cfg)
+    c, a = attention.cache_shape(cfg, batch, max_len, window, dtype)
+    if cross_len:
+        sds = jax.ShapeDtypeStruct((batch, cross_len, cfg.n_kv_heads, cfg.dh),
+                                   dtype)
+        c = {**c, "xk": sds, "xv": sds}
+        a = {**a, "xk": ("batch", None, "kv_heads", None),
+             "xv": ("batch", None, "kv_heads", None)}
+    return c, a
+
+
+def init_layer_cache(kind: str, cfg: ArchConfig, batch: int, max_len: int,
+                     dtype=jnp.bfloat16, cross_len: int = 0):
+    shp, _ = layer_cache_shape(kind, cfg, batch, max_len, dtype, cross_len)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shp)
+
+
+def apply_layer_decode(p, cache, x: Array, kind: str, cfg: ArchConfig, *,
+                       pos: Array, pos3: Optional[Array] = None,
+                       compute_dtype=jnp.bfloat16):
+    """One-token decode through a layer. Returns (x, new_cache)."""
+    h = L.apply_norm(p["ln1"], x, cfg.norm_kind)
+    if kind == "ssm":
+        y, cache = mamba.decode_step(p["ssm"], cache, h, cfg, compute_dtype)
+        return x + y, cache
+    if kind == "rec":
+        y, cache = rglru.decode_step(p["rec"], cache, h, cfg, compute_dtype)
+        x = x + y
+    else:
+        window, use_rope = _kind_attn_opts(kind, cfg)
+        kv_cache = {"k": cache["k"], "v": cache["v"]}
+        y, kv_cache = attention.decode_step(
+            p["attn"], kv_cache, h, cfg, pos=pos, window=window,
+            use_rope=use_rope, pos3=pos3, compute_dtype=compute_dtype)
+        cache = {**cache, **kv_cache}
+        x = x + y
+    if "cross" in p and "xk" in cache:
+        hx = L.apply_norm(p["lnx"], x, cfg.norm_kind)
+        y = _cross_decode(p["cross"], cache["xk"], cache["xv"], hx, cfg,
+                          compute_dtype)
+        x = x + y
+    h2 = L.apply_norm(p["ln2"], x, cfg.norm_kind)
+    if "moe" in p:
+        y, _ = moe_mod.forward(p["moe"], h2, cfg, compute_dtype,
+                               full_capacity=True)
+        x = x + y
+    else:
+        x = x + L.apply_mlp(p["mlp"], h2, cfg.act, compute_dtype)
+    return x, cache
+
+
+def _cross_decode(p, xk, xv, x, cfg, compute_dtype):
+    """Cross-attention for one decoder token against static encoder kv."""
+    B = x.shape[0]
+    dh = cfg.dh
+    q = L.apply_dense(p["wq"], x, compute_dtype).reshape(B, 1, cfg.n_heads, dh)
+    KV = cfg.n_kv_heads
+    G = cfg.n_heads // KV
+    qg = q.reshape(B, 1, KV, G, dh).astype(jnp.float32) * dh ** -0.5
+    logits = jnp.einsum("btkgd,bskd->btkgs", qg, xk.astype(jnp.float32))
+    prob = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("btkgs,bskd->btkgd", prob, xv.astype(jnp.float32))
+    o = o.reshape(B, 1, cfg.n_heads * dh).astype(compute_dtype)
+    return L.apply_dense(p["wo"], o, compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# prefill-mode layer: full sequence + cache production
+# ---------------------------------------------------------------------------
+
+def apply_layer_prefill(p, x: Array, kind: str, cfg: ArchConfig, *,
+                        pos: Array, max_len: int,
+                        pos3: Optional[Array] = None,
+                        memory: Optional[Array] = None,
+                        impl: str = "flash_xla",
+                        compute_dtype=jnp.bfloat16):
+    """Full-sequence forward that also emits the layer's decode cache."""
+    B, T, D = x.shape
+    h = L.apply_norm(p["ln1"], x, cfg.norm_kind)
+    if kind == "ssm":
+        di = mamba.d_inner(cfg)
+        xz = L.apply_dense(p["ssm"]["in_proj"], h, compute_dtype)
+        xb, z = jnp.split(xz, 2, axis=-1)
+        xc = mamba._causal_conv(xb, p["ssm"]["conv"], compute_dtype)
+        xc = jax.nn.silu(xc)
+        h0 = jnp.zeros((B, di, cfg.ssm.state), jnp.float32)
+        y, h_fin = mamba.scan_sequence(p["ssm"], xc, cfg, h0)
+        y = y * jax.nn.silu(z)
+        out = L.apply_dense(p["ssm"]["out_proj"], y, compute_dtype)
+        K = cfg.ssm.conv
+        cache = {"h": h_fin,
+                 "conv": _tail_pad(xb, K - 1).astype(jnp.bfloat16)}
+        return x + out, cache
+    if kind == "rec":
+        w = rglru.width(cfg)
+        xb = L.apply_dense(p["rec"]["in_x"], h, compute_dtype)
+        g = jax.nn.gelu(L.apply_dense(p["rec"]["in_gate"], h, compute_dtype))
+        xc = rglru._causal_conv(xb, p["rec"]["conv"], compute_dtype)
+        a, b = rglru._lru_coeffs(p["rec"], xc)
+
+        def op(l, r_):
+            al, bl = l
+            ar, br = r_
+            return al * ar, ar * bl + br
+
+        _, hs = jax.lax.associative_scan(op, (a, b), axis=1)
+        y = hs.astype(compute_dtype) * g
+        out = L.apply_dense(p["rec"]["out"], y, compute_dtype)
+        K = cfg.rglru.conv
+        cache = {"h": hs[:, -1],
+                 "conv": _tail_pad(xb, K - 1).astype(jnp.bfloat16)}
+        x = x + out
+    else:
+        window, use_rope = _kind_attn_opts(kind, cfg)
+        dh = cfg.dh
+        q = L.apply_dense(p["attn"]["wq"], h, compute_dtype).reshape(
+            B, T, cfg.n_heads, dh)
+        k = L.apply_dense(p["attn"]["wk"], h, compute_dtype).reshape(
+            B, T, cfg.n_kv_heads, dh)
+        v = L.apply_dense(p["attn"]["wv"], h, compute_dtype).reshape(
+            B, T, cfg.n_kv_heads, dh)
+        if "qknorm" in p["attn"]:
+            q = L.apply_head_rmsnorm(q, p["attn"]["qknorm"]["q_scale"])
+            k = L.apply_head_rmsnorm(k, p["attn"]["qknorm"]["k_scale"])
+        if use_rope:
+            if cfg.rope_kind == "mrope" and pos3 is not None:
+                q = L.apply_mrope(q, pos3, cfg.rope_theta, cfg.mrope_sections)
+                k = L.apply_mrope(k, pos3, cfg.rope_theta, cfg.mrope_sections)
+            elif cfg.rope_kind != "none":
+                q = L.apply_rope(q, pos, cfg.rope_theta)
+                k = L.apply_rope(k, pos, cfg.rope_theta)
+        o = attention.attend(q, k, v, causal=True, window=window, impl=impl)
+        o = o.reshape(B, T, cfg.n_heads * dh)
+        x = x + L.apply_dense(p["attn"]["wo"], o, compute_dtype)
+        cache = _fill_kv_cache(k, v, window, max_len)
+    if "cross" in p and memory is not None:
+        hx = L.apply_norm(p["lnx"], x, cfg.norm_kind)
+        x = x + attention.forward(p["cross"], hx, cfg, pos=pos, causal=False,
+                                  memory=memory, use_rope=False, impl=impl,
+                                  compute_dtype=compute_dtype)
+        xk = L.apply_dense(p["cross"]["wk"], memory, compute_dtype).reshape(
+            B, memory.shape[1], cfg.n_kv_heads, cfg.dh)
+        xv = L.apply_dense(p["cross"]["wv"], memory, compute_dtype).reshape(
+            B, memory.shape[1], cfg.n_kv_heads, cfg.dh)
+        cache = {**cache, "xk": xk.astype(jnp.bfloat16),
+                 "xv": xv.astype(jnp.bfloat16)}
+    h2 = L.apply_norm(p["ln2"], x, cfg.norm_kind)
+    if "moe" in p:
+        # inference semantics: dropless (consistent with the decode path)
+        y, _ = moe_mod.forward(p["moe"], h2, cfg, compute_dtype,
+                               full_capacity=True)
+        x = x + y
+    else:
+        x = x + L.apply_mlp(p["mlp"], h2, cfg.act, compute_dtype)
+    return x, cache
+
+
+def _tail_pad(x: Array, n: int) -> Array:
+    """Last n positions of (B, T, d) (left-padded with zeros if T < n)."""
+    B, T, d = x.shape
+    if T >= n:
+        return x[:, T - n:]
+    return jnp.pad(x, ((0, 0), (n - T, 0), (0, 0)))
+
+
+def _fill_kv_cache(k: Array, v: Array, window: Optional[int],
+                   max_len: int):
+    """Static cache from prefill kv. k/v (B, T, KV, dh); T <= max_len.
+
+    Global layers: cache size max_len, prompt occupies [0, T).
+    Window layers: ring buffer of W slots; slot t%W holds position t for
+    the last min(W, T) positions.
+    """
+    B, T, KV, dh = k.shape
+    if window is None:
+        pad = max_len - T
+        ck = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cv = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return {"k": ck.astype(jnp.bfloat16), "v": cv.astype(jnp.bfloat16)}
+    W = min(window, max_len)
+    keep = min(W, T)
+    kt = k[:, T - keep:]
+    vt = v[:, T - keep:]
+    # absolute positions of kept entries: [T-keep, T); ring slot = pos % W
+    slots = (jnp.arange(T - keep, T)) % W
+    ck = jnp.zeros((B, W, KV, dh), jnp.bfloat16)
+    cv = jnp.zeros((B, W, KV, dh), jnp.bfloat16)
+    ck = ck.at[:, slots].set(kt.astype(jnp.bfloat16))
+    cv = cv.at[:, slots].set(vt.astype(jnp.bfloat16))
+    return {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# the stack: scan super-blocks + unrolled tail
+# ---------------------------------------------------------------------------
+
+def init_stack(key, cfg: ArchConfig, dtype, cross: bool = False):
+    """Stacked params: {"scan": {pos_i: stacked params}, "tail": [...]}. """
+    unit, reps, tail = cfg.layer_pattern()
+    p: dict = {"scan": {}, "tail": []}
+    a: dict = {"scan": {}, "tail": []}
+    for i, kind in enumerate(unit):
+        per_rep = []
+        axes_one = None
+        for r in range(reps):
+            kk = jax.random.fold_in(key, i * 1000 + r)
+            pp, aa = init_layer(kk, kind, cfg, dtype, cross=cross)
+            per_rep.append(pp)
+            axes_one = aa
+        p["scan"][f"u{i}"] = jax.tree.map(lambda *xs: jnp.stack(xs), *per_rep)
+        a["scan"][f"u{i}"] = jax.tree.map(
+            lambda ax: ("repeats",) + ax, axes_one,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(e, (str, type(None))) for e in x))
+    for j, kind in enumerate(tail):
+        kk = jax.random.fold_in(key, 999_000 + j)
+        pp, aa = init_layer(kk, kind, cfg, dtype, cross=cross)
+        p["tail"].append(pp)
+        a["tail"].append(aa)
+    return p, a
+
+
+def _remat(fn, cfg: ArchConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    if cfg.remat == "attn":
+        # save ONLY the attention sublayer outputs: skips re-running the
+        # flash fwd scan during backward (the per-layer hot spot) at the
+        # cost of one activation-sized residual per layer — the sweet spot
+        # found in §Perf iteration 3.
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.save_only_these_names(
+                "attn_out"))
+    return jax.checkpoint(fn)
+
+
+def apply_stack(p, x: Array, cfg: ArchConfig, *, pos: Array,
+                pos3: Optional[Array] = None, memory: Optional[Array] = None,
+                causal: bool = True, impl: str = "flash_xla",
+                compute_dtype=jnp.bfloat16):
+    """Train-mode stack. Returns (x, total_aux)."""
+    unit, reps, tail = cfg.layer_pattern()
+
+    def block(x, unit_params):
+        aux = jnp.zeros((), jnp.float32)
+        for i, kind in enumerate(unit):
+            x, a = apply_layer(unit_params[f"u{i}"], x, kind, cfg, pos=pos,
+                               pos3=pos3, memory=memory, causal=causal,
+                               impl=impl, compute_dtype=compute_dtype)
+            aux = aux + a
+        return x, aux
+
+    blk = _remat(block, cfg)
+    x, auxs = jax.lax.scan(lambda c, w: blk(c, w), x, p["scan"])
+    aux = jnp.sum(auxs)
+    for j, kind in enumerate(tail):
+        x, a = apply_layer(p["tail"][j], x, kind, cfg, pos=pos, pos3=pos3,
+                           memory=memory, causal=causal, impl=impl,
+                           compute_dtype=compute_dtype)
+        aux = aux + a
+    return x, aux
+
+
+def stack_cache_shape(cfg: ArchConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16, cross_len: int = 0):
+    """Cache SDS pytree matching the stack structure (scan-stacked)."""
+    unit, reps, tail = cfg.layer_pattern()
+    c: dict = {"scan": {}, "tail": []}
+    a: dict = {"scan": {}, "tail": []}
+    for i, kind in enumerate(unit):
+        shp, ax = layer_cache_shape(kind, cfg, batch, max_len, dtype,
+                                    cross_len)
+        c["scan"][f"u{i}"] = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((reps,) + s.shape, s.dtype), shp)
+        a["scan"][f"u{i}"] = jax.tree.map(
+            lambda t: ("repeats",) + t, ax,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(e, (str, type(None))) for e in x))
+    for kind in tail:
+        shp, ax = layer_cache_shape(kind, cfg, batch, max_len, dtype,
+                                    cross_len)
+        c["tail"].append(shp)
+        a["tail"].append(ax)
+    return c, a
+
+
+def apply_stack_decode(p, cache, x: Array, cfg: ArchConfig, *, pos: Array,
+                       pos3: Optional[Array] = None,
+                       compute_dtype=jnp.bfloat16):
+    """One-token decode through the whole stack. Returns (x, new_cache)."""
+    unit, reps, tail = cfg.layer_pattern()
+
+    def block(x, scanned):
+        unit_params, unit_cache = scanned
+        new_cache = {}
+        for i, kind in enumerate(unit):
+            x, nc = apply_layer_decode(unit_params[f"u{i}"],
+                                       unit_cache[f"u{i}"], x, kind, cfg,
+                                       pos=pos, pos3=pos3,
+                                       compute_dtype=compute_dtype)
+            new_cache[f"u{i}"] = nc
+        return x, new_cache
+
+    x, new_scan_cache = jax.lax.scan(block, x, (p["scan"], cache["scan"]))
+    out_cache = {"scan": new_scan_cache, "tail": []}
+    for j, kind in enumerate(tail):
+        x, nc = apply_layer_decode(p["tail"][j], cache["tail"][j], x, kind,
+                                   cfg, pos=pos, pos3=pos3,
+                                   compute_dtype=compute_dtype)
+        out_cache["tail"].append(nc)
+    return x, out_cache
+
+
+def apply_stack_prefill(p, x: Array, cfg: ArchConfig, *, pos: Array,
+                        max_len: int, pos3: Optional[Array] = None,
+                        memory: Optional[Array] = None,
+                        impl: str = "flash_xla",
+                        compute_dtype=jnp.bfloat16):
+    """Full-sequence prefill producing the stacked cache."""
+    unit, reps, tail = cfg.layer_pattern()
+
+    def block(x, unit_params):
+        caches = {}
+        for i, kind in enumerate(unit):
+            x, c = apply_layer_prefill(unit_params[f"u{i}"], x, kind, cfg,
+                                       pos=pos, max_len=max_len, pos3=pos3,
+                                       memory=memory, impl=impl,
+                                       compute_dtype=compute_dtype)
+            caches[f"u{i}"] = c
+        return x, caches
+
+    blk = _remat(block, cfg)
+    x, scan_caches = jax.lax.scan(lambda c, w: blk(c, w), x, p["scan"])
+    cache = {"scan": scan_caches, "tail": []}
+    for j, kind in enumerate(tail):
+        x, c = apply_layer_prefill(p["tail"][j], x, kind, cfg, pos=pos,
+                                   max_len=max_len, pos3=pos3, memory=memory,
+                                   impl=impl, compute_dtype=compute_dtype)
+        cache["tail"].append(c)
+    return x, cache

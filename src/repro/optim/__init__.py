@@ -1,0 +1,3 @@
+from repro.optim import adamw, compress, svrg
+
+__all__ = ["adamw", "compress", "svrg"]

@@ -1,0 +1,89 @@
+"""Gradient compression with error feedback (for the DP all-reduce).
+
+Two codecs, both with error-feedback residual accumulation (Seide et al. /
+Karimireddy et al.: the compression error is added back to the next
+gradient, keeping the method convergent):
+
+* ``topk``  — keep the k largest-magnitude entries per tensor (sparsify);
+* ``int8``  — per-tensor symmetric int8 quantization.
+
+Under pjit the DP all-reduce is implicit, so the codec is applied to the
+*gradient values* (compress -> decompress) before the optimizer: this is
+numerically identical to compressing each DP shard's contribution before
+an all-reduce with the same codec, and is how the ablation in EXPERIMENTS
+measures accuracy impact without leaving the SPMD programming model. The
+wire-bytes saving is reported analytically (codec ratio x gradient bytes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressConfig:
+    codec: str = "none"         # none | topk | int8
+    topk_frac: float = 0.01     # fraction of entries kept by topk
+
+
+class EFState(NamedTuple):
+    residual: Any               # same pytree as grads
+
+
+def init(grads_shapes) -> EFState:
+    z = lambda s: jnp.zeros(s.shape, jnp.float32)
+    return EFState(residual=jax.tree.map(z, grads_shapes))
+
+
+def _topk_codec(g: Array, frac: float) -> Array:
+    flat = g.reshape(-1)
+    k = max(1, int(flat.shape[0] * frac))
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    mask = jnp.zeros_like(flat).at[idx].set(1.0)
+    return (flat * mask).reshape(g.shape)
+
+
+def _int8_codec(g: Array) -> Array:
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127)
+    return q * scale
+
+
+def compress(cfg: CompressConfig, state: EFState, grads):
+    """Returns (decompressed grads as seen post-all-reduce, new EF state)."""
+    if cfg.codec == "none":
+        return grads, state
+
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        if cfg.codec == "topk":
+            out = _topk_codec(gf, cfg.topk_frac)
+        elif cfg.codec == "int8":
+            out = _int8_codec(gf)
+        else:
+            raise ValueError(cfg.codec)
+        return out.astype(g.dtype), gf - out
+
+    pairs = jax.tree.map(one, grads, state.residual)
+    out = jax.tree.map(lambda t: t[0], pairs,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    res = jax.tree.map(lambda t: t[1], pairs,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    return out, EFState(residual=res)
+
+
+def wire_ratio(cfg: CompressConfig) -> float:
+    """Bytes-on-wire ratio vs fp32 all-reduce (analytic)."""
+    if cfg.codec == "none":
+        return 1.0
+    if cfg.codec == "topk":
+        # values + indices, both 4 bytes
+        return 2.0 * cfg.topk_frac
+    if cfg.codec == "int8":
+        return 0.25
+    raise ValueError(cfg.codec)

@@ -1,0 +1,51 @@
+"""SVRG for network training — the paper's Algorithm 2 lifted to LM heads.
+
+Exact for the convex last-layer / ODM-head case (repro.core.dsvrg is the
+faithful convex implementation); for full networks the variance-reduction
+correction g(w) - g(anchor) + h is a heuristic (non-convexity breaks the
+theory) and is flagged as such. Anchor refresh every ``anchor_every``
+steps computes the full gradient over a reference batch set.
+
+Usage: wraps any base optimizer's gradient: the train loop calls
+``correct(state, grads, params, anchor_grad_fn)`` before the optimizer
+update.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SVRGConfig:
+    anchor_every: int = 100      # steps between anchor refreshes
+    enabled: bool = False
+
+
+class SVRGState(NamedTuple):
+    anchor_params: Any
+    anchor_grad: Any             # h = full gradient at the anchor
+    age: jax.Array               # steps since refresh
+
+
+def init(params, grads_like) -> SVRGState:
+    z = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return SVRGState(anchor_params=jax.tree.map(jnp.asarray, params),
+                     anchor_grad=jax.tree.map(z, grads_like),
+                     age=jnp.zeros((), jnp.int32))
+
+
+def refresh(state: SVRGState, params, full_grad) -> SVRGState:
+    return SVRGState(anchor_params=params, anchor_grad=full_grad,
+                     age=jnp.zeros((), jnp.int32))
+
+
+def correct(state: SVRGState, grads, anchor_batch_grads) -> tuple[Any, SVRGState]:
+    """g_vr = g(w) - g(anchor) + h on the same minibatch."""
+    out = jax.tree.map(
+        lambda g, ga, h: g - ga + h.astype(g.dtype),
+        grads, anchor_batch_grads, state.anchor_grad)
+    return out, state._replace(age=state.age + 1)

@@ -1,0 +1,155 @@
+"""Train / serve step builders — the functions the launcher jits.
+
+``make_train_step``: value_and_grad over model.loss_fn + AdamW update,
+with optional gradient accumulation (scan over microbatches), gradient
+compression (error-feedback codec before the update, standing in for a
+compressed DP all-reduce), and remat governed by the ArchConfig.
+
+``make_serve_step`` / ``make_prefill``: the decode/prefill entry points
+used by the serving example and the decode-shape dry-run cells.
+
+Every builder returns (fn, in_axes, out_axes) where the axes are logical
+sharding trees resolvable by repro.sharding — launchers turn them into
+in_shardings/out_shardings for jit; smoke tests call fn directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import model as M
+from repro.optim import adamw, compress as comp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: adamw.AdamWConfig = dataclasses.field(
+        default_factory=adamw.AdamWConfig)
+    compression: comp.CompressConfig = dataclasses.field(
+        default_factory=comp.CompressConfig)
+    grad_accum: int = 1            # microbatches per step
+    attn_impl: str = "flash_xla"   # flash_xla | flash_pallas | ref
+    aux_weight: float = 0.01
+
+
+class TrainState:
+    """Lightweight pytree: params + optimizer (+ EF residual) + step."""
+
+    # implemented as a plain dict for pytree friendliness
+    @staticmethod
+    def create(params, use_ef: bool):
+        st = {"params": params, "opt": adamw.init(params)}
+        if use_ef:
+            st["ef"] = comp.init(params)
+        return st
+
+    @staticmethod
+    def shapes(param_shapes_, use_ef: bool):
+        st = {"params": param_shapes_,
+              "opt": adamw.state_shapes(param_shapes_)}
+        if use_ef:
+            f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+            st["ef"] = comp.EFState(residual=jax.tree.map(f32, param_shapes_))
+        return st
+
+    @staticmethod
+    def axes(param_axes, use_ef: bool):
+        st = {"params": param_axes, "opt": adamw.state_axes(param_axes)}
+        if use_ef:
+            is_axes = lambda x: isinstance(x, tuple) and all(
+                isinstance(e, (str, type(None))) for e in x)
+            st["ef"] = comp.EFState(residual=jax.tree.map(
+                lambda a: a, param_axes, is_leaf=is_axes))
+        return st
+
+
+def make_train_step(cfg: ArchConfig, tc: TrainConfig):
+    """(state, batch) -> (state, metrics)."""
+    use_ef = tc.compression.codec != "none"
+
+    def loss(params, batch):
+        return M.loss_fn(params, batch, cfg, impl=tc.attn_impl,
+                         aux_weight=tc.aux_weight)
+
+    grad_fn = jax.value_and_grad(loss, has_aux=True)
+
+    def step(state, batch):
+        params = state["params"]
+        if tc.grad_accum > 1:
+            micro = _split_microbatches(batch, tc.grad_accum)
+
+            def acc(carry, mb):
+                g_sum, l_sum = carry
+                (l, mets), g = grad_fn(params, mb)
+                g_sum = jax.tree.map(lambda a, b: a + b, g_sum, g)
+                return (g_sum, l_sum + l), mets
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (g_sum, l_sum), metss = jax.lax.scan(
+                acc, (zeros, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: g / tc.grad_accum, g_sum)
+            lval = l_sum / tc.grad_accum
+            metrics = jax.tree.map(lambda m: m[-1], metss)
+        else:
+            (lval, metrics), grads = grad_fn(params, batch)
+        if use_ef:
+            grads, ef = comp.compress(tc.compression, state["ef"], grads)
+        new_params, opt, omets = adamw.update(tc.optimizer, state["opt"],
+                                              params, grads)
+        out = {"params": new_params, "opt": opt}
+        if use_ef:
+            out["ef"] = ef
+        metrics = {**metrics, **omets, "loss": lval}
+        return out, metrics
+
+    return step
+
+
+def _split_microbatches(batch: dict, n: int) -> dict:
+    """(B, ...) -> (n, B/n, ...) for scan."""
+    def sp(x):
+        if x.ndim >= 2 and x.shape[0] % n == 0:
+            return x.reshape(n, x.shape[0] // n, *x.shape[1:])
+        if x.ndim == 3 and x.shape[1] % n == 0:     # pos3 (3, B, S)
+            return jnp.moveaxis(
+                x.reshape(x.shape[0], n, x.shape[1] // n, x.shape[2]), 1, 0)
+        return jnp.broadcast_to(x, (n,) + x.shape)
+    return {k: sp(v) for k, v in batch.items()}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def make_serve_step(cfg: ArchConfig):
+    """(params, cache, batch) -> (logits, cache). batch per input_specs."""
+
+    def step(params, cache, batch):
+        pos3 = batch.get("pos3")
+        return M.decode(params, cache, batch["tokens"], batch["pos"], cfg,
+                        pos3=pos3)
+
+    return step
+
+
+def make_prefill(cfg: ArchConfig, max_len: int, attn_impl: str = "flash_xla"):
+    def fn(params, batch):
+        return M.prefill(params, batch, cfg, max_len=max_len, impl=attn_impl)
+    return fn
+
+
+def greedy_sample(logits: Array) -> Array:
+    return jnp.argmax(logits[:, -1], axis=-1)[:, None]
+
+
+def temperature_sample(key, logits: Array, temp: float = 1.0) -> Array:
+    return jax.random.categorical(key, logits[:, -1] / temp, axis=-1)[:, None]

@@ -1,0 +1,9 @@
+import os
+import sys
+
+# Make `repro` importable when pytest runs without PYTHONPATH=src.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
+# single real device. SPMD tests spawn subprocesses that set their own
+# --xla_force_host_platform_device_count.

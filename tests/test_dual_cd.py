@@ -1,0 +1,117 @@
+"""Dual coordinate descent: convergence, KKT, feasibility, warm starts."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import dual_cd, kernel_fns as kf, odm
+
+
+def _problem(M=128, d=6, gamma=0.5, seed=0):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = jnp.concatenate([jax.random.normal(k1, (M // 2, d)) + 1.0,
+                         jax.random.normal(k2, (M // 2, d)) - 1.0])
+    y = jnp.concatenate([jnp.ones(M // 2), -jnp.ones(M // 2)])
+    perm = jax.random.permutation(k3, M)
+    x, y = x[perm], y[perm]
+    spec = kf.KernelSpec(name="rbf", gamma=gamma)
+    Q = kf.signed_gram(spec, x, y)
+    return x, y, spec, Q
+
+
+PARAMS = odm.ODMParams(lam=1.0, theta=0.1, ups=0.5)
+
+
+class TestSolve:
+    def test_converges_to_kkt(self):
+        _, _, _, Q = _problem()
+        res = dual_cd.solve(Q, PARAMS, mscale=128.0, tol=1e-6,
+                            max_sweeps=500)
+        assert float(res.kkt) < 1e-5
+        assert int(res.sweeps) < 500
+
+    def test_box_feasible(self):
+        _, _, _, Q = _problem()
+        res = dual_cd.solve(Q, PARAMS, mscale=128.0, tol=1e-6)
+        assert bool(jnp.all(res.alpha >= 0.0))
+
+    def test_objective_below_zero_start(self):
+        # f(0) = 0; the optimum must improve on it
+        _, _, _, Q = _problem()
+        res = dual_cd.solve(Q, PARAMS, mscale=128.0, tol=1e-6)
+        obj = odm.dual_objective(Q, res.alpha, PARAMS, 128.0)
+        assert float(obj) < 0.0
+
+    def test_warm_start_is_noop_at_optimum(self):
+        _, _, _, Q = _problem()
+        res = dual_cd.solve(Q, PARAMS, mscale=128.0, tol=1e-6)
+        res2 = dual_cd.solve(Q, PARAMS, mscale=128.0, alpha0=res.alpha,
+                             tol=1e-5)
+        assert int(res2.sweeps) == 0
+
+    def test_u_cache_consistent(self):
+        _, _, _, Q = _problem()
+        res = dual_cd.solve(Q, PARAMS, mscale=128.0, tol=1e-6)
+        zeta, beta = odm.split_alpha(res.alpha)
+        want = Q @ (zeta - beta)
+        assert float(jnp.max(jnp.abs(res.u - want))) < 1e-4
+
+
+class TestSolveBlock:
+    @pytest.mark.parametrize("block", [32, 64, 128])
+    def test_matches_exact(self, block):
+        _, _, _, Q = _problem()
+        exact = dual_cd.solve(Q, PARAMS, mscale=128.0, tol=1e-7,
+                              max_sweeps=1000)
+        blk = dual_cd.solve_block(Q, PARAMS, mscale=128.0, block=block,
+                                  tol=1e-7, max_outer=300)
+        o1 = odm.dual_objective(Q, exact.alpha, PARAMS, 128.0)
+        o2 = odm.dual_objective(Q, blk.alpha, PARAMS, 128.0)
+        assert abs(float(o1 - o2)) < 1e-4
+        assert float(jnp.max(jnp.abs(exact.alpha - blk.alpha))) < 1e-3
+
+    def test_ragged_block(self):
+        # M=96 with block=64 exercises padding
+        x, y, spec, _ = _problem(M=96)
+        Q = kf.signed_gram(spec, x, y)
+        blk = dual_cd.solve_block(Q, PARAMS, mscale=96.0, block=64,
+                                  tol=1e-6, max_outer=200)
+        assert float(blk.kkt) < 1e-5
+        assert blk.alpha.shape == (192,)
+
+
+class TestDualPrimalBridge:
+    def test_strong_duality_linear(self):
+        """p(w*) == -f(alpha*) for the linear kernel (strong duality)."""
+        key = jax.random.PRNGKey(1)
+        M, d = 96, 5
+        x = jax.random.normal(key, (M, d))
+        y = jnp.sign(jax.random.normal(jax.random.fold_in(key, 1), (M,)))
+        spec = kf.KernelSpec(name="linear")
+        Q = kf.signed_gram(spec, x, y)
+        res = dual_cd.solve(Q, PARAMS, mscale=float(M), tol=1e-8,
+                            max_sweeps=3000)
+        w = odm.w_from_alpha(x, y, res.alpha)
+        p_val = odm.primal_objective(w, x, y, PARAMS)
+        d_val = odm.dual_objective(Q, res.alpha, PARAMS, float(M))
+        assert abs(float(p_val + d_val)) < 1e-3 * max(1.0, abs(float(p_val)))
+
+    def test_grad_matches_autodiff(self):
+        key = jax.random.PRNGKey(2)
+        M, d = 64, 7
+        x = jax.random.normal(key, (M, d))
+        y = jnp.sign(jax.random.normal(jax.random.fold_in(key, 1), (M,)))
+        w = jax.random.normal(jax.random.fold_in(key, 2), (d,)) * 0.3
+        g1 = odm.primal_grad(w, x, y, PARAMS)
+        g2 = jax.grad(odm.primal_objective)(w, x, y, PARAMS)
+        assert float(jnp.max(jnp.abs(g1 - g2))) < 1e-5
+
+    def test_minibatch_grad_unbiased(self):
+        key = jax.random.PRNGKey(3)
+        M, d = 128, 5
+        x = jax.random.normal(key, (M, d))
+        y = jnp.sign(jax.random.normal(jax.random.fold_in(key, 1), (M,)))
+        w = jax.random.normal(jax.random.fold_in(key, 2), (d,)) * 0.3
+        full = odm.primal_grad(w, x, y, PARAMS)
+        batch_mean = odm.minibatch_grad(w, x, y, PARAMS, M)  # batch == all
+        assert float(jnp.max(jnp.abs(full - batch_mean))) < 1e-5

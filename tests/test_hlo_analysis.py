@@ -1,0 +1,120 @@
+"""HLO analysis: collective-bytes parser + trip-aware dot FLOPs counter,
+validated against modules with KNOWN flops/collectives."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch import hlo_analysis as ha
+
+
+class TestShapeBytes:
+    def test_simple(self):
+        assert ha.shape_bytes("f32[16,4096,576]") == 16 * 4096 * 576 * 4
+        assert ha.shape_bytes("bf16[8]") == 16
+
+    def test_tuple(self):
+        s = "(f32[4,4]{1,0}, bf16[2]{0})"
+        assert ha.shape_bytes(s) == 64 + 4
+
+    def test_non_numeric_ignored(self):
+        assert ha.shape_bytes("token[]") == 0
+
+
+class TestDotFlops:
+    def test_plain_matmul(self):
+        M = N = K = 64
+        f = jax.jit(lambda a, b: a @ b)
+        hlo = f.lower(jax.ShapeDtypeStruct((M, K), jnp.float32),
+                      jax.ShapeDtypeStruct((K, N), jnp.float32)) \
+            .compile().as_text()
+        got = ha.dot_flops(hlo)
+        assert got == 2 * M * N * K, got
+
+    def test_scan_multiplies_trip_count(self):
+        """A matmul inside lax.scan must count trip-count times."""
+        M = 32
+        TRIPS = 7
+
+        def f(a, b):
+            def body(c, _):
+                return c @ b, None
+            c, _ = jax.lax.scan(body, a, None, length=TRIPS)
+            return c
+
+        hlo = jax.jit(f).lower(
+            jax.ShapeDtypeStruct((M, M), jnp.float32),
+            jax.ShapeDtypeStruct((M, M), jnp.float32)).compile().as_text()
+        got = ha.dot_flops(hlo)
+        want = 2 * M * M * M * TRIPS
+        assert got == want, (got, want)
+
+    def test_xla_cost_analysis_undercounts_scan(self):
+        """Documents WHY dot_flops exists: XLA counts the body once."""
+        M, TRIPS = 32, 7
+
+        def f(a, b):
+            def body(c, _):
+                return c @ b, None
+            c, _ = jax.lax.scan(body, a, None, length=TRIPS)
+            return c
+
+        comp = jax.jit(f).lower(
+            jax.ShapeDtypeStruct((M, M), jnp.float32),
+            jax.ShapeDtypeStruct((M, M), jnp.float32)).compile()
+        xla_flops = float(comp.cost_analysis().get("flops", 0.0))
+        assert xla_flops < 2 * M ** 3 * TRIPS  # undercounted
+
+
+class TestWireBytes:
+    def test_conventions(self):
+        b = 1024
+        assert ha._wire_bytes("all-gather", b, 4) == b * 3 / 4
+        assert ha._wire_bytes("all-reduce", b, 4) == 2 * b * 3 / 4
+        assert ha._wire_bytes("reduce-scatter", b, 4) == b * 3
+        assert ha._wire_bytes("collective-permute", b, 4) == b
+        assert ha._wire_bytes("all-reduce", b, 1) == 0.0
+
+
+class TestCollectiveParse:
+    def test_synthetic_module(self):
+        hlo = """HloModule test
+
+%cond (p: (s32[], f32[8])) -> pred[] {
+  %p = (s32[], f32[8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %k = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i, %k), direction=LT
+}
+
+%body (p: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %p = (s32[], f32[8]) parameter(0)
+  %x = f32[8] get-tuple-element(%p), index=1
+  %ag = f32[32]{0} all-gather(%x), channel_id=1, replica_groups=[2,4]<=[8], dimensions={0}
+  %i = s32[] get-tuple-element(%p), index=0
+  ROOT %t = (s32[], f32[8]) tuple(%i, %x)
+}
+
+ENTRY %main (a: f32[8]) -> f32[8] {
+  %a = f32[8] parameter(0)
+  %ar = f32[8]{0} all-reduce(%a), channel_id=2, replica_groups=[1,8]<=[8], to_apply=%add
+  %w = (s32[], f32[8]) while(%init), condition=%cond, body=%body
+  ROOT %r = f32[8] get-tuple-element(%w), index=1
+}
+"""
+        stats = ha.collective_bytes(hlo)
+        # all-reduce: 8 floats = 32B, g=8 -> 2*32*7/8 = 56
+        assert stats.bytes_by_kind["all-reduce"] == pytest.approx(56.0)
+        # all-gather inside while x5 trips: result 32 floats = 128B, g=4
+        # -> 5 * 128 * 3/4 = 480
+        assert stats.bytes_by_kind["all-gather"] == pytest.approx(480.0)
+        assert stats.count_by_kind["all-gather"] == 5
+
+
+class TestRoofline:
+    def test_terms_and_dominance(self):
+        rl = ha.roofline(197e12, 819e9, 0.0)      # 1s compute, 1s memory
+        assert rl.compute_s == pytest.approx(1.0)
+        assert rl.memory_s == pytest.approx(1.0)
+        assert rl.collective_s == 0.0
+        rl2 = ha.roofline(1e12, 1e9, 500e9)
+        assert rl2.dominant == "collective"

@@ -1,0 +1,72 @@
+"""Speculative scheduler: first-completion-wins, duplicates, failures."""
+import threading
+import time
+
+from repro.distributed.straggler import SpecConfig, SpeculativeScheduler
+
+
+class TestScheduler:
+    def test_results_in_order(self):
+        sched = SpeculativeScheduler(SpecConfig(max_workers=4))
+        tasks = [lambda i=i: i * i for i in range(10)]
+        assert sched.run(tasks) == [i * i for i in range(10)]
+
+    def test_straggler_gets_duplicated(self):
+        """One task sleeps 50x the median; a speculative duplicate (which
+        does not sleep on its 2nd attempt) must finish the job early."""
+        attempts = {"n": 0}
+        lock = threading.Lock()
+
+        def straggler():
+            with lock:
+                attempts["n"] += 1
+                first = attempts["n"] == 1
+            if first:
+                time.sleep(5.0)       # pathological first attempt
+            return "done"
+
+        tasks = [lambda: (time.sleep(0.01) or "fast") for _ in range(7)]
+        tasks.append(straggler)
+        sched = SpeculativeScheduler(SpecConfig(
+            max_workers=4, spec_quantile=0.5, spec_factor=2.0))
+        t0 = time.monotonic()
+        out = sched.run(tasks)
+        dt = time.monotonic() - t0
+        assert out[-1] == "done"
+        assert dt < 4.0, f"speculation failed to rescue ({dt:.1f}s)"
+        assert attempts["n"] >= 2
+
+    def test_failed_attempt_retried(self):
+        state = {"fails": 0}
+        lock = threading.Lock()
+
+        def flaky():
+            with lock:
+                state["fails"] += 1
+                if state["fails"] == 1:
+                    raise RuntimeError("transient")
+            return 42
+
+        sched = SpeculativeScheduler(SpecConfig(max_workers=2))
+        assert sched.run([flaky]) == [42]
+
+    def test_idempotent_partition_solve(self):
+        """Duplicated SODM partition solves give identical results
+        (pure function of the inputs) — first-wins is safe."""
+        import jax
+        import jax.numpy as jnp
+        from repro.core import dual_cd, kernel_fns as kf, odm
+
+        key = jax.random.PRNGKey(0)
+        x = jax.random.normal(key, (32, 4))
+        y = jnp.sign(jax.random.normal(jax.random.fold_in(key, 1), (32,)))
+        Q = kf.signed_gram(kf.KernelSpec("rbf", 0.5), x, y)
+        p = odm.ODMParams()
+
+        def solve_task():
+            return dual_cd.solve(Q, p, mscale=32.0, tol=1e-6).alpha
+
+        sched = SpeculativeScheduler(SpecConfig(max_workers=4))
+        outs = sched.run([solve_task] * 4)
+        for o in outs[1:]:
+            assert bool(jnp.array_equal(outs[0], o))

@@ -1,0 +1,96 @@
+"""Property tests (hypothesis): the paper's theorems must hold on any
+valid instance, and core solver invariants must be maintained."""
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dual_cd, kernel_fns as kf, odm, partition as part, theory
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _data_from_seed(seed: int, M: int, d: int):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = jnp.concatenate([jax.random.normal(k1, (M // 2, d)) + 0.8,
+                         jax.random.normal(k2, (M // 2, d)) - 0.8])
+    y = jnp.concatenate([jnp.ones(M // 2), -jnp.ones(M // 2)])
+    perm = jax.random.permutation(k3, M)
+    return x[perm], y[perm]
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       theta=st.floats(0.05, 0.5),
+       ups=st.floats(0.2, 1.0),
+       k_log=st.integers(1, 3))
+def test_theorem1_bound_holds(seed, theta, ups, k_log):
+    """0 <= d(a~*) - d(a*) <= U^2 (Qbar + M (M-m) c)  and the solution gap
+    bound (Eqn. 5-6) for random problems and hyperparameters."""
+    M, d = 64, 4
+    x, y = _data_from_seed(seed, M, d)
+    params = odm.ODMParams(lam=1.0, theta=theta, ups=ups)
+    spec = kf.KernelSpec(name="rbf", gamma=0.7)
+    ev = theory.eval_theorem1(spec, x, y, params, n_partitions=2 ** k_log,
+                              tol=1e-8)
+    assert bool(ev.holds), (float(ev.gap_objective),
+                            float(ev.bound_objective),
+                            float(ev.gap_solution),
+                            float(ev.bound_solution))
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10_000), theta=st.floats(0.05, 0.4))
+def test_theorem2_bound_holds(seed, theta):
+    M, d = 48, 4
+    x, y = _data_from_seed(seed, M, d)
+    params = odm.ODMParams(lam=1.0, theta=theta, ups=0.5)
+    spec = kf.KernelSpec(name="rbf", gamma=0.7)
+    K = 4
+    plan = part.make_plan(spec, x, K, K, jax.random.PRNGKey(seed))
+    ev = theory.eval_theorem2(spec, x, y, params, plan.stratum, K, plan.perm,
+                              tol=1e-8)
+    assert bool(ev.holds), (float(ev.gap), float(ev.bound))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       theta=st.floats(0.05, 0.5), ups=st.floats(0.2, 1.0))
+def test_cd_monotone_objective(seed, theta, ups):
+    """Each CD sweep must not increase the dual objective."""
+    M, d = 48, 4
+    x, y = _data_from_seed(seed, M, d)
+    params = odm.ODMParams(lam=1.0, theta=theta, ups=ups)
+    spec = kf.KernelSpec(name="rbf", gamma=0.7)
+    Q = kf.signed_gram(spec, x, y)
+    q_diag = jnp.diagonal(Q)
+    alpha = jnp.zeros(2 * M)
+    u = jnp.zeros(M)
+    prev = float(odm.dual_objective(Q, alpha, params, float(M)))
+    for _ in range(5):
+        alpha, u = dual_cd.sweep(Q, q_diag, alpha, u, params, float(M))
+        cur = float(odm.dual_objective(Q, alpha, params, float(M)))
+        assert cur <= prev + 1e-6
+        prev = cur
+    assert bool(jnp.all(alpha >= 0.0))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_partition_is_permutation(seed):
+    M = 64
+    x, _ = _data_from_seed(seed, M, 4)
+    spec = kf.KernelSpec(name="rbf", gamma=0.7)
+    plan = part.make_plan(spec, x, 4, 8, jax.random.PRNGKey(seed))
+    assert sorted(plan.perm.tolist()) == list(range(M))
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000), gamma=st.floats(0.1, 2.0))
+def test_gram_psd(seed, gamma):
+    """RBF Gram matrices must be PSD (up to fp jitter)."""
+    x, _ = _data_from_seed(seed, 32, 4)
+    K = kf.rbf_gram(x, x, gamma)
+    evals = jnp.linalg.eigvalsh(K)
+    assert float(jnp.min(evals)) > -1e-4
+    assert float(jnp.max(jnp.abs(jnp.diagonal(K) - 1.0))) < 1e-5

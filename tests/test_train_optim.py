@@ -1,0 +1,148 @@
+"""Optimizers, compression, grad accumulation, data pipeline."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.data import lm as lmdata
+from repro.models import model as M
+from repro.optim import adamw, compress
+from repro.train import steps as steps_mod
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestAdamW:
+    def test_decreases_quadratic(self):
+        w = {"x": jnp.array([3.0, -2.0])}
+        cfg = adamw.AdamWConfig(lr=0.1, warmup_steps=1, total_steps=100,
+                                weight_decay=0.0)
+        st = adamw.init(w)
+        for _ in range(50):
+            g = jax.tree.map(lambda p: 2 * p, w)
+            w, st, mets = adamw.update(cfg, st, w, g)
+        assert float(jnp.max(jnp.abs(w["x"]))) < 0.2
+
+    def test_grad_clip(self):
+        w = {"x": jnp.zeros(4)}
+        cfg = adamw.AdamWConfig(grad_clip=1.0, warmup_steps=0)
+        st = adamw.init(w)
+        g = {"x": jnp.full((4,), 100.0)}
+        _, _, mets = adamw.update(cfg, st, w, g)
+        assert float(mets["grad_norm"]) == pytest.approx(200.0)
+
+    def test_schedule_warmup_and_decay(self):
+        cfg = adamw.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                                min_lr_frac=0.1)
+        assert float(adamw.schedule(cfg, jnp.int32(0))) == 0.0
+        assert float(adamw.schedule(cfg, jnp.int32(10))) == pytest.approx(1.0)
+        assert float(adamw.schedule(cfg, jnp.int32(100))) == pytest.approx(0.1)
+
+
+class TestCompression:
+    def test_int8_bounded_error(self):
+        g = {"x": jax.random.normal(KEY, (256,))}
+        cfg = compress.CompressConfig(codec="int8")
+        st = compress.init(g)
+        out, st = compress.compress(cfg, st, g)
+        err = float(jnp.max(jnp.abs(out["x"] - g["x"])))
+        scale = float(jnp.max(jnp.abs(g["x"]))) / 127
+        assert err <= scale * 0.51 + 1e-6
+
+    def test_topk_keeps_largest(self):
+        g = {"x": jnp.array([0.1, -5.0, 0.2, 3.0])}
+        cfg = compress.CompressConfig(codec="topk", topk_frac=0.5)
+        st = compress.init(g)
+        out, st = compress.compress(cfg, st, g)
+        assert float(out["x"][1]) == -5.0 and float(out["x"][3]) == 3.0
+        assert float(out["x"][0]) == 0.0
+
+    def test_error_feedback_accumulates(self):
+        """Dropped mass must reappear via the EF residual."""
+        g = {"x": jnp.array([1.0, 0.1, 0.0, 0.0])}
+        cfg = compress.CompressConfig(codec="topk", topk_frac=0.25)
+        st = compress.init(g)
+        out1, st = compress.compress(cfg, st, g)      # keeps 1.0, drops 0.1
+        assert float(st.residual["x"][1]) == pytest.approx(0.1)
+        zero = {"x": jnp.zeros(4)}
+        out2, st = compress.compress(cfg, st, zero)   # residual resurfaces
+        assert float(out2["x"][1]) == pytest.approx(0.1)
+
+    def test_wire_ratio(self):
+        assert compress.wire_ratio(
+            compress.CompressConfig(codec="int8")) == 0.25
+        assert compress.wire_ratio(
+            compress.CompressConfig(codec="topk", topk_frac=0.01)) == 0.02
+
+
+class TestGradAccum:
+    def test_accum_matches_full_batch(self):
+        cfg = configs.get_smoke("granite-8b")
+        p, _ = M.init_params(KEY, cfg)
+        batch = lmdata.batch_at(
+            lmdata.LMDataConfig(vocab=cfg.vocab, seq_len=16,
+                                global_batch=8), 0)
+        s0 = steps_mod.TrainState.create(p, use_ef=False)
+        tc1 = steps_mod.TrainConfig()
+        tc2 = dataclasses.replace(tc1, grad_accum=4)
+        s1, m1 = jax.jit(steps_mod.make_train_step(cfg, tc1))(s0, batch)
+        s2, m2 = jax.jit(steps_mod.make_train_step(cfg, tc2))(s0, batch)
+        d = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(
+            a.astype(jnp.float32) - b.astype(jnp.float32)))),
+            s1["params"], s2["params"])
+        assert max(jax.tree.leaves(d)) < 1e-4
+
+
+class TestLMData:
+    def test_deterministic(self):
+        dc = lmdata.LMDataConfig(vocab=128, seq_len=32, global_batch=4)
+        b1 = lmdata.batch_at(dc, 7)
+        b2 = lmdata.batch_at(dc, 7)
+        assert bool(jnp.array_equal(b1["tokens"], b2["tokens"]))
+
+    def test_labels_are_shifted_tokens(self):
+        dc = lmdata.LMDataConfig(vocab=128, seq_len=32, global_batch=4)
+        b = lmdata.batch_at(dc, 0)
+        assert bool(jnp.array_equal(b["labels"][:, :-1], b["tokens"][:, 1:]))
+        assert bool(jnp.all(b["labels"][:, -1] == -1))
+
+    def test_rank_slices_partition_batch(self):
+        dc = lmdata.LMDataConfig(vocab=128, seq_len=8, global_batch=8)
+        b = lmdata.batch_at(dc, 0)
+        slices = [lmdata.rank_slice(b, r, 4)["tokens"] for r in range(4)]
+        whole = jnp.concatenate(slices)
+        assert bool(jnp.array_equal(whole, b["tokens"]))
+
+    def test_in_vocab(self):
+        dc = lmdata.LMDataConfig(vocab=100, seq_len=16, global_batch=2)
+        b = lmdata.batch_at(dc, 3)
+        assert int(jnp.max(b["tokens"])) < 100
+        assert int(jnp.min(b["tokens"])) >= 0
+
+
+class TestSyntheticDatasets:
+    def test_stats_match_spec(self):
+        from repro.data import synthetic
+        ds = synthetic.load("a7a", scale=0.05)
+        n = ds.x_train.shape[0] + ds.x_test.shape[0]
+        assert abs(n - int(32561 * 0.05)) <= 8
+        assert ds.x_train.shape[1] == 123
+        # [0, 1] normalization
+        assert float(jnp.min(ds.x_train)) >= 0.0
+        assert float(jnp.max(ds.x_train)) <= 1.0
+        # rough class balance
+        frac = float(jnp.mean(ds.y_train > 0))
+        assert 0.15 < frac < 0.35
+
+    def test_linearly_separable_enough(self):
+        from repro.core import odm
+        from repro.data import synthetic
+        ds = synthetic.load("svmguide1", scale=0.1)
+        w = jnp.zeros(ds.x_train.shape[1])
+        params = odm.ODMParams()
+        for _ in range(300):
+            w = w - 0.1 * odm.primal_grad(w, ds.x_train, ds.y_train, params)
+        acc = float(odm.accuracy(ds.y_test, jnp.sign(ds.x_test @ w)))
+        assert acc > 0.85, acc
