@@ -54,3 +54,23 @@ def run(out):
     t2, _ = timed(f2, Q, warmup=1, iters=2)
     out.append(f"kernels,dual_cd_block,M={M},{t2:.4f},"
                f"speedup_vs_scalar={t1 / t2:.2f}")
+
+    # SODM per-level solve: one whole level (K partitions of m rows)
+    # through each engine — the hot path the solver-engine layer routes
+    from repro.core import engines
+    spec = kf.KernelSpec("rbf", 0.5)
+    K_parts, m = 8, 256
+    xs = jax.random.normal(jax.random.fold_in(KEY, 4), (K_parts, m, 16))
+    ys = jnp.sign(jax.random.normal(jax.random.fold_in(KEY, 5),
+                                    (K_parts, m)))
+    a0 = jnp.zeros((K_parts, 2 * m))
+    t_ref = None
+    for name in engines.ENGINES:
+        solver = jax.jit(engines.make_local_solver(name, block=128),
+                         static_argnames=("spec", "params", "tol",
+                                         "max_sweeps"))
+        t, _ = timed(solver, xs, ys, a0, spec=spec, params=p, tol=1e-5,
+                     max_sweeps=100, warmup=1, iters=2)
+        t_ref = t if t_ref is None else t_ref
+        out.append(f"kernels,sodm_level_{name},K={K_parts}_m={m},{t:.4f},"
+                   f"speedup_vs_scalar={t_ref / t:.2f}")

@@ -21,6 +21,10 @@ SCALE = {"gisette": 0.1, "svmguide1": 0.12, "phishing": 0.08, "a7a": 0.03,
 PARAMS = odm.ODMParams(lam=100.0, theta=0.1, ups=0.5)
 CFG = sodm.SODMConfig(p=2, levels=3, n_landmarks=8, tol=1e-4,
                       max_sweeps=200)
+# same solve routed through the block-CD solver engine (the Pallas path's
+# XLA oracle) — accuracy must match SODM, wall-clock shows the engine win
+CFG_BLOCK = sodm.SODMConfig(p=2, levels=3, n_landmarks=8, tol=1e-4,
+                            max_sweeps=200, engine="block")
 
 
 def run(out):
@@ -41,6 +45,12 @@ def run(out):
             ds.y_test, sodm.predict(SPEC, res, x, y, ds.x_test)))
         results["SODM"] = (acc, t)
 
+        t, bres = timed(lambda: sodm.solve(SPEC, x, y, PARAMS, CFG_BLOCK,
+                                           key), warmup=0)
+        acc = float(odm.accuracy(
+            ds.y_test, sodm.predict(SPEC, bres, x, y, ds.x_test)))
+        results["SODM-blk"] = (acc, t)
+
         t, cres = timed(lambda: baselines.cascade_solve(
             SPEC, x, y, PARAMS, levels=3, key=key), warmup=0)
         acc = float(odm.accuracy(
@@ -59,10 +69,13 @@ def run(out):
             ds.y_test, sodm.predict(SPEC, dcres, x, y, ds.x_test)))
         results["DC-ODM"] = (acc, t)
 
-        best_acc = max(a for a, _ in results.values())
+        # SODM-blk is our own engine variant, not a paper rival — keep it
+        # out of the win counts
+        rivals = {k: v for k, v in results.items() if k != "SODM-blk"}
+        best_acc = max(a for a, _ in rivals.values())
         if results["SODM"][0] >= best_acc - 1e-6:
             wins_acc += 1
-        if results["SODM"][1] <= min(t for _, t in results.values()) + 1e-9:
+        if results["SODM"][1] <= min(t for _, t in rivals.values()) + 1e-9:
             wins_time += 1
         for m, (a, t) in results.items():
             out.append(f"table2,{name},{m},{a:.4f},{t:.2f}")

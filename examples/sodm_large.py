@@ -25,6 +25,10 @@ def main():
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--ckpt-dir", default="/tmp/sodm_large_ckpt")
     ap.add_argument("--scale", type=float, default=0.002)   # of 5M rows
+    ap.add_argument("--engine", default="scalar",
+                    choices=("scalar", "pallas"),
+                    help="local solver: paper-faithful scalar CD or the "
+                         "Pallas greedy block-CD tile kernel")
     args = ap.parse_args()
 
     ds = synthetic.load("SUSY", scale=args.scale)
@@ -70,9 +74,33 @@ def main():
 
         # partition solves are pure + idempotent: dispatch through the
         # speculative scheduler (first-completion wins on duplicates)
-        solve_one = jax.jit(lambda xk, yk, ak: dual_cd.solve(
-            kf.signed_gram(spec, xk, yk), params, mscale=float(m),
-            alpha0=ak, tol=1e-4, max_sweeps=150).alpha)
+        def _prep(Q, ak):
+            # merged children were solved at scale m/p; the ray rescale
+            # conditions them to this level's scale (see
+            # repro.core.odm.warm_start_scale / sodm's scale note)
+            zk, bk = odm.split_alpha(ak)
+            u = Q @ (zk - bk)
+            t = odm.warm_start_scale(u, ak, params, float(m))
+            return ak * t, u * t
+
+        if args.engine == "pallas":
+            from repro.kernels import ops
+
+            def _pallas_one(xk, yk, ak):
+                Q = kf.signed_gram(spec, xk, yk)
+                ak, _ = _prep(Q, ak)
+                alpha, _, _ = ops.dual_cd_solve(
+                    Q, c=params.c, ups=params.ups, theta=params.theta,
+                    mscale=float(m), n_passes=150, tol=1e-4, alpha0=ak)
+                return alpha
+            solve_one = jax.jit(_pallas_one)
+        else:
+            def _scalar_one(xk, yk, ak):
+                Q = kf.signed_gram(spec, xk, yk)
+                ak, uk = _prep(Q, ak)
+                return dual_cd.solve(Q, params, mscale=float(m), alpha0=ak,
+                                     u0=uk, tol=1e-4, max_sweeps=150).alpha
+            solve_one = jax.jit(_scalar_one)
         tasks = [(lambda i=i: solve_one(xs[i], ys[i], alphas[i]))
                  for i in range(K)]
         results = sched.run(tasks)

@@ -80,17 +80,23 @@ def kkt_from_u(u: Array, alpha: Array, params: ODMParams, mscale: float) -> Arra
 
 def solve(Q: Array, params: ODMParams, mscale: float,
           alpha0: Array | None = None, tol: float = 1e-5,
-          max_sweeps: int = 200) -> CDResult:
+          max_sweeps: int = 200, u0: Array | None = None) -> CDResult:
     """Run CD sweeps until the projected KKT residual drops below tol.
 
     ``alpha0`` is the warm start (SODM Algorithm 1 line 12 concatenates the
-    child solutions here); defaults to zeros.
+    child solutions here); defaults to zeros. ``u0`` is the optional
+    precomputed cache Q (zeta0 - beta0) — u is linear in alpha, so callers
+    that already paid the matvec (e.g. a warm-start rescale) pass the
+    scaled cache and skip recomputing it.
     """
     m = Q.shape[0]
     q_diag = jnp.diagonal(Q)
     alpha = jnp.zeros(2 * m, Q.dtype) if alpha0 is None else alpha0
-    zeta, beta = split_alpha(alpha)
-    u = Q @ (zeta - beta)
+    if u0 is None:
+        zeta, beta = split_alpha(alpha)
+        u = Q @ (zeta - beta)
+    else:
+        u = u0
 
     def cond(carry):
         alpha, u, s, kkt = carry
@@ -114,14 +120,19 @@ def solve(Q: Array, params: ODMParams, mscale: float,
 
 def solve_block(Q: Array, params: ODMParams, mscale: float,
                 block: int = 256, alpha0: Array | None = None,
-                tol: float = 1e-5, max_outer: int = 200) -> CDResult:
+                tol: float = 1e-5, max_outer: int = 200,
+                u0: Array | None = None) -> CDResult:
     """Exact CD within each (block,)-sized tile, Jacobi across tiles.
 
     The per-tile solve only touches the diagonal Gram block (resident in
     VMEM on TPU); cross-tile coupling enters through the cache u, which is
     refreshed once per outer iteration (one Q @ gamma matmul — MXU work).
-    Converges for ODM's diagonally-dominated Hessian (Mcv*I shift); the
-    damping factor guards pathological off-diagonal mass.
+    Each Jacobi pass is safeguarded by an exact line search along the
+    joint step (f is quadratic along it, and u moves linearly, so the
+    optimal damping costs no extra matvec): undamped simultaneous tile
+    solves can diverge when the off-diagonal mass beats the M·c·I shift
+    (e.g. small c = weak regularization), while the damped pass is
+    monotone for any Q.
     """
     m = Q.shape[0]
     nblk = -(-m // block)
@@ -161,10 +172,8 @@ def solve_block(Q: Array, params: ODMParams, mscale: float,
         return ablk
 
     def outer(carry):
-        alpha, it, kkt = carry
+        alpha, u, it, kkt = carry
         zeta, beta = alpha[:mp], alpha[mp:]
-        gam = zeta - beta
-        u = Qp @ gam                                     # global cache refresh
         # process all tiles (Jacobi across tiles, each uses the same u snapshot
         # but exact updates within the tile via the diag block)
         def tile_body(b, acc):
@@ -186,18 +195,44 @@ def solve_block(Q: Array, params: ODMParams, mscale: float,
             z = jax.lax.dynamic_update_slice(z, ablk[:block], (idx,))
             bta = jax.lax.dynamic_update_slice(bta, ablk[block:], (idx,))
             return z, bta
-        zeta, beta = jax.lax.fori_loop(0, nblk, tile_body, (zeta, beta))
+        z_new, b_new = jax.lax.fori_loop(0, nblk, tile_body, (zeta, beta))
+        # exact line search along the joint Jacobi step: f(alpha + t*d) is
+        # quadratic in t and u moves linearly, so the optimal damping is
+        # closed-form and reuses the one matvec this pass needs anyway.
+        # t = 1 when tiles don't conflict; t < 1 tames off-diagonal mass
+        # that would otherwise make simultaneous tile updates diverge.
+        dz, db = z_new - zeta, b_new - beta
+        u_d = Qp @ (dz - db)
+        gz = u + mscale * params.c * params.ups * zeta + (params.theta - 1.0)
+        gb = -u + mscale * params.c * beta + (params.theta + 1.0)
+        gdot = gz @ dz + gb @ db
+        quad = (dz - db) @ u_d + mscale * params.c * (
+            params.ups * dz @ dz + db @ db)
+        t = jnp.where(quad > 0.0,
+                      jnp.clip(-gdot / jnp.maximum(quad, 1e-30), 0.0, 1.0),
+                      1.0)
+        zeta, beta = zeta + t * dz, beta + t * db
         alpha = jnp.concatenate([zeta, beta])
-        u = Qp @ (zeta - beta)
+        u = u + t * u_d
         kkt = _kkt_padded(u, alpha, valid, params, mscale, mp)
-        return alpha, it + 1, kkt
+        return alpha, u, it + 1, kkt
 
     def cond(carry):
-        _, it, kkt = carry
+        _, _, it, kkt = carry
         return jnp.logical_and(it < max_outer, kkt > tol)
 
-    init = (alpha, jnp.int32(0), jnp.array(jnp.inf, Q.dtype))
-    alpha, it, kkt = jax.lax.while_loop(cond, lambda c: outer(c), init)
+    # evaluate KKT at the warm start so an already-optimal init runs zero
+    # outer passes (Algorithm 1 line 5's convergence check reads this).
+    # u0 is (m,) from the caller (u is linear in alpha, so a rescaled warm
+    # start's cache comes for free); padded rows of Qp are zero => pad u
+    # with zeros.
+    if u0 is None:
+        u0 = Qp @ (alpha[:mp] - alpha[mp:])
+    else:
+        u0 = jnp.pad(u0, (0, pad))
+    init = (alpha, u0, jnp.int32(0), _kkt_padded(u0, alpha, valid, params,
+                                                 mscale, mp))
+    alpha, u, it, kkt = jax.lax.while_loop(cond, lambda c: outer(c), init)
     zeta, beta = alpha[:mp], alpha[mp:]
     out = jnp.concatenate([zeta[:m], beta[:m]])
     u = Q @ (zeta[:m] - beta[:m])

@@ -95,6 +95,27 @@ def dual_grad_from_u(u: Array, alpha: Array, params: ODMParams,
     return jnp.concatenate([gz, gb])
 
 
+def warm_start_scale(u: Array, alpha: Array, params: ODMParams,
+                     mscale: float) -> Array:
+    """Optimal scalar t for a warm start: argmin_t f(t · alpha).
+
+    f is quadratic along the ray, f(t·a) = t²·(½ aᵀH a) + t·(bᵀa), so
+    t* = -bᵀa / (aᵀH a), clipped to t ≥ 0 (box constraint). SODM merges
+    concatenate child duals solved at regularizer scale m into a parent
+    solve at scale p·m; the right correction is ≈1/p when the m·c·I term
+    dominates H and ≈1 when Q dominates — this line search lands on the
+    optimum in either regime for one cached matvec (``u = Q (zeta-beta)``,
+    which the solvers need anyway). t = 1 for a zero (cold) start.
+    """
+    zeta, beta = split_alpha(alpha)
+    gam = zeta - beta
+    quad = gam @ u + mscale * params.c * (
+        params.ups * zeta @ zeta + beta @ beta)
+    lin = (params.theta - 1.0) * jnp.sum(zeta) \
+        + (params.theta + 1.0) * jnp.sum(beta)
+    return jnp.where(quad > 0.0, jnp.maximum(-lin / quad, 0.0), 1.0)
+
+
 def hess_diag(q_diag: Array, params: ODMParams, mscale: float) -> Array:
     """diag(H) = [Q_ii + M c ups; Q_ii + M c]."""
     hz = q_diag + mscale * params.c * params.ups

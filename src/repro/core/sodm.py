@@ -13,20 +13,53 @@ alpha is [zeta_all; beta_all] (2 p m_l,), so "concatenation" interleaves:
 parent_zeta = concat(zeta_children), parent_beta = concat(beta_children).
 ``merge_alphas`` implements exactly that.
 
-Two execution engines:
+Scale note: the local dual's diagonal regularizer is m_l·c (Eqn. 4), so
+dual magnitudes shrink as partitions grow — at a merge the children's
+duals were solved at scale m_l but the parent solves at scale p·m_l, and a
+plain concatenation can be up to ~p× too large (its KKT residual is then
+*worse* than a cold start's). Every solver engine therefore opens a level
+solve with an exact line search along the warm-start ray (the dual
+objective is quadratic in t, closed form — see
+:func:`repro.core.odm.warm_start_scale`), which lands within a few KKT
+digits of the parent optimum in both the regularizer-dominant (t ≈ 1/p)
+and the Q-dominant (t ≈ 1) regime and is what makes Algorithm 1's warm
+starts actually cut solve passes.
 
-* :func:`solve` — single-process: ``vmap`` over partitions per level
-  (levels are a Python loop; shapes are static per level so each level
-  compiles once and is reused across calls with the same sizes).
+Two execution layouts:
+
+* :func:`solve` — single-process: all partitions of a level advance
+  together (levels are a Python loop; shapes are static per level so each
+  level compiles once and is reused across calls with the same sizes).
 
 * :func:`solve_sharded` — SPMD: ``shard_map`` over the mesh ``data`` axis.
   While K_l >= n_dev each device sweeps its own slab of partitions with
   **zero** cross-device traffic (the paper's "parallel training" phase);
   when a merge would span devices we all-gather X/y/alpha inside the merge
   group (axis-index arithmetic) — this is the Spark shuffle of the paper
-  mapped onto ICI collectives.
+  mapped onto ICI collectives. Once K_l < n_dev the residual levels run
+  replicated (at that point the problem is a single in-memory QP anyway).
 
-Both engines checkpoint per level through ``level_callback`` for fault
+Solver engines
+--------------
+
+HOW each level's K local ODM duals are solved is orthogonal to WHERE they
+run, so it is pluggable: ``SODMConfig.engine`` selects a
+:class:`repro.core.engines.LocalSolver`:
+
+* ``"scalar"`` (default) — exact Gauss-Seidel dual CD per partition, the
+  paper-faithful reference. Latency-bound on accelerators.
+* ``"block"``  — pure-jnp block-Gauss-Seidel (exact CD inside VMEM-sized
+  tiles, Jacobi across tiles). The XLA oracle of the Pallas path.
+* ``"pallas"`` — the greedy block-CD Pallas tile kernel: one
+  ``pallas_call`` per pass for the whole level, warm starts included;
+  partitions larger than ``SODMConfig.gram_threshold`` refresh the dual
+  cache u = Q (zeta - beta) from on-the-fly ``rbf_gram`` tiles so
+  per-level memory stays O(m·B) instead of O(m²).
+
+All engines honor Algorithm 1's warm starts (line 12) and report 0
+sweeps/passes for an already-converged start (line 5's early stop).
+
+Both layouts checkpoint per level through ``level_callback`` for fault
 tolerance (see repro.distributed.checkpoint).
 """
 from __future__ import annotations
@@ -39,7 +72,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core import dual_cd, kernel_fns as kf
+from repro.core import engines, kernel_fns as kf
 from repro.core import partition as part_mod
 from repro.core.odm import ODMParams
 
@@ -54,9 +87,14 @@ class SODMConfig:
     levels: int = 3            # L: start with p^L partitions
     n_landmarks: int = 8       # S strata
     tol: float = 1e-4          # per-solve KKT tolerance
-    max_sweeps: int = 100      # CD sweep cap per local solve
+    max_sweeps: int = 100      # CD sweep / outer-pass cap per local solve
     early_stop: bool = True    # Algorithm 1 line 5-6
     partition_strategy: str = "stratified"   # stratified | random | cluster
+    engine: str = "scalar"     # scalar | block | pallas (see module docs)
+    block: int = 256           # VMEM tile size of the block/pallas engines
+    gram_threshold: int = 4096  # pallas: partitions above this refresh u
+    #                             from on-the-fly rbf_gram tiles (O(m·B)
+    #                             memory) instead of a materialized Q
 
 
 class SODMResult(NamedTuple):
@@ -83,20 +121,6 @@ def split_to_partitions(alpha: Array, K: int) -> Array:
     zetas = alpha[:M].reshape(K, m)
     betas = alpha[M:].reshape(K, m)
     return jnp.concatenate([zetas, betas], axis=1)
-
-
-def _solve_level(xs: Array, ys: Array, alphas: Array, spec: kf.KernelSpec,
-                 params: ODMParams, tol: float, max_sweeps: int):
-    """vmap'd local ODM solves: xs (K, m, d), ys (K, m), alphas (K, 2m)."""
-    m = xs.shape[1]
-
-    def one(xk, yk, ak):
-        Q = kf.signed_gram(spec, xk, yk)
-        res = dual_cd.solve(Q, params, mscale=float(m), alpha0=ak,
-                            tol=tol, max_sweeps=max_sweeps)
-        return res.alpha, res.sweeps, res.kkt
-
-    return jax.vmap(one)(xs, ys, alphas)
 
 
 def solve(spec: kf.KernelSpec, x: Array, y: Array, params: ODMParams,
@@ -130,7 +154,9 @@ def solve(spec: kf.KernelSpec, x: Array, y: Array, params: ODMParams,
     kkt = jnp.array(jnp.inf, x.dtype)
 
     level = cfg.levels
-    solve_jit = jax.jit(_solve_level,
+    solver = engines.make_local_solver(cfg.engine, block=cfg.block,
+                                       gram_threshold=cfg.gram_threshold)
+    solve_jit = jax.jit(solver,
                         static_argnames=("spec", "params", "tol", "max_sweeps"))
     while True:
         xs = xp.reshape(K, m, -1)
@@ -148,6 +174,9 @@ def solve(spec: kf.KernelSpec, x: Array, y: Array, params: ODMParams,
         if K == 1 or level == 0 or converged:
             break
         # merge p siblings: (K, 2m) -> (K/p, 2pm), interleaving zeta/beta
+        # (plain concatenation, Algorithm 1 line 12 — the engine rescales
+        # the warm start to the parent's regularizer scale, see the
+        # module's scale note)
         Kn = K // cfg.p
         grouped = alphas.reshape(Kn, cfg.p, 2 * m)
         merged = jax.vmap(merge_alphas)(grouped)       # (Kn, 2 p m)
@@ -157,23 +186,14 @@ def solve(spec: kf.KernelSpec, x: Array, y: Array, params: ODMParams,
 
     alpha = merge_alphas(alphas) if alphas.ndim == 2 and alphas.shape[0] > 1 \
         else alphas.reshape(-1)
-    return SODMResult(alpha=alpha, perm=perm, levels_run=cfg.levels - level + 1,
+    return SODMResult(alpha=alpha, perm=perm,
+                      levels_run=len(sweeps_per_level),
                       sweeps_per_level=sweeps_per_level, kkt=kkt)
 
 
 # ---------------------------------------------------------------------------
 # SPMD engine (shard_map over the mesh `data` axis)
 # ---------------------------------------------------------------------------
-
-def _level_body_local(xs, ys, alphas, spec, params, tol, max_sweeps, m):
-    """Per-device body: solve this device's slab of partitions (k_loc, m, d)."""
-    def one(xk, yk, ak):
-        Q = kf.signed_gram(spec, xk, yk)
-        res = dual_cd.solve(Q, params, mscale=float(m), alpha0=ak,
-                            tol=tol, max_sweeps=max_sweeps)
-        return res.alpha, res.sweeps, res.kkt
-    return jax.vmap(one)(xs, ys, alphas)
-
 
 def solve_sharded(spec: kf.KernelSpec, x: Array, y: Array, params: ODMParams,
                   cfg: SODMConfig, key: jax.Array, mesh: jax.sharding.Mesh,
@@ -184,7 +204,9 @@ def solve_sharded(spec: kf.KernelSpec, x: Array, y: Array, params: ODMParams,
     p^L % n_dev == 0 (each device starts with an equal slab). Levels with
     K_l >= n_dev run with zero communication. Once K_l < n_dev the data
     no longer fills the axis; we gather everything and finish replicated —
-    at that point the problem is a single in-memory QP anyway.
+    at that point the problem is a single in-memory QP anyway. Every level
+    is solved exactly once (no re-solve at the sharded/replicated
+    hand-off) and ``levels_run`` reports the true count.
     """
     from jax.experimental.shard_map import shard_map
 
@@ -207,53 +229,50 @@ def solve_sharded(spec: kf.KernelSpec, x: Array, y: Array, params: ODMParams,
     kkt = jnp.array(jnp.inf, x.dtype)
     level = cfg.levels
 
-    while K >= n_dev:
+    solver = engines.make_local_solver(cfg.engine, block=cfg.block,
+                                       gram_threshold=cfg.gram_threshold)
+    body = partial(solver, spec=spec, params=params, tol=cfg.tol,
+                   max_sweeps=cfg.max_sweeps)
+    repl_jit = jax.jit(solver,
+                      static_argnames=("spec", "params", "tol", "max_sweeps"))
+
+    while True:
         xs = xp.reshape(K, m, -1)
         ys = yp.reshape(K, m)
-
-        body = partial(_level_body_local, spec=spec, params=params,
-                       tol=cfg.tol, max_sweeps=cfg.max_sweeps, m=m)
-        shmapped = shard_map(
-            lambda a, b, c: body(a, b, c),
-            mesh=mesh,
-            in_specs=(P(data_axis), P(data_axis), P(data_axis)),
-            out_specs=(P(data_axis), P(data_axis), P(data_axis)),
-        )
-        alphas, sweeps, kkts = jax.jit(shmapped)(xs, ys, alphas)
+        if K >= n_dev and K % n_dev == 0 and n_dev > 1:
+            # parallel phase: each device sweeps its own slab of partitions
+            shmapped = shard_map(
+                lambda a, b, c: body(a, b, c),
+                mesh=mesh,
+                in_specs=(P(data_axis), P(data_axis), P(data_axis)),
+                out_specs=(P(data_axis), P(data_axis), P(data_axis)),
+                # the per-partition while_loops have no replication rule on
+                # this jax version; outputs are fully sharded anyway
+                check_rep=False,
+            )
+            alphas, sweeps, kkts = jax.jit(shmapped)(xs, ys, alphas)
+        else:
+            # replicated tail: K < n_dev partitions left (tiny residual
+            # levels — a single in-memory QP by now)
+            alphas, sweeps, kkts = repl_jit(xs, ys, alphas, spec=spec,
+                                            params=params, tol=cfg.tol,
+                                            max_sweeps=cfg.max_sweeps)
         sweeps_per_level.append(int(jnp.max(sweeps)))
         kkt = jnp.max(kkts)
-        if K == 1:
+        converged = cfg.early_stop and int(jnp.max(sweeps)) == 0 \
+            and level < cfg.levels
+        if K == 1 or converged:
             break
         Kn = K // cfg.p
         grouped = alphas.reshape(Kn, cfg.p, 2 * m)
         alphas = jax.vmap(merge_alphas)(grouped)
         K, m = Kn, m * cfg.p
         level -= 1
-        if K < n_dev and K >= 1:
-            break
 
-    # replicated tail for K < n_dev (tiny residual levels)
-    tail_jit = jax.jit(_solve_level,
-                       static_argnames=("spec", "params", "tol",
-                                        "max_sweeps"))
-    while K >= 1:
-        xs = xp.reshape(K, m, -1)
-        ys = yp.reshape(K, m)
-        alphas, sweeps, kkts = tail_jit(xs, ys, alphas, spec=spec,
-                                        params=params, tol=cfg.tol,
-                                        max_sweeps=cfg.max_sweeps)
-        sweeps_per_level.append(int(jnp.max(sweeps)))
-        kkt = jnp.max(kkts)
-        if K == 1:
-            break
-        Kn = K // cfg.p
-        grouped = alphas.reshape(Kn, cfg.p, 2 * m)
-        alphas = jax.vmap(merge_alphas)(grouped)
-        K, m = Kn, m * cfg.p
-        level -= 1
-
-    alpha = alphas.reshape(-1)
-    return SODMResult(alpha=alpha, perm=perm, levels_run=cfg.levels + 1,
+    alpha = merge_alphas(alphas) if alphas.ndim == 2 and alphas.shape[0] > 1 \
+        else alphas.reshape(-1)
+    return SODMResult(alpha=alpha, perm=perm,
+                      levels_run=len(sweeps_per_level),
                       sweeps_per_level=sweeps_per_level, kkt=kkt)
 
 

@@ -29,9 +29,12 @@ class DatasetSpec:
 
 # paper Table 1 statistics (gisette's 5000 features trimmed to 512 for CPU
 # benches at scale<1; full d used when scale == 1.0)
+# svmguide1's sep is calibrated against the paper band for *bias-free*
+# linear ODM (~0.96 on the real set): at sep=1.6 even the Bayes rule
+# through the origin tops out near 0.8.
 PAPER_DATASETS: dict[str, DatasetSpec] = {
     "gisette": DatasetSpec("gisette", 6_000, 5_000, 0.50, 1.1),
-    "svmguide1": DatasetSpec("svmguide1", 7_089, 4, 0.56, 1.6),
+    "svmguide1": DatasetSpec("svmguide1", 7_089, 4, 0.56, 3.0),
     "phishing": DatasetSpec("phishing", 11_055, 68, 0.56, 1.5),
     "a7a": DatasetSpec("a7a", 32_561, 123, 0.24, 1.3),
     "cod-rna": DatasetSpec("cod-rna", 59_535, 8, 0.33, 1.3),
@@ -63,8 +66,16 @@ def make_blobs(spec: DatasetSpec, seed: int = 0, scale: float = 1.0,
     k1, k2, k3, k4, k5 = jax.random.split(key, 5)
     n_pos = int(n * spec.balance)
     n_neg = n - n_pos
-    # class means along a random direction
+    # class means along a random *zero-mean* direction. The [0, 1]
+    # normalization below shifts the data midpoint to ~0.5·1, and the
+    # linear ODM has no bias term — it can only represent hyperplanes
+    # through the origin. A generic direction leaves the class boundary
+    # unreachable (accuracy ceilings near 0.75 no matter the separation);
+    # a zero-mean direction keeps the boundary normal orthogonal to the
+    # all-ones shift, matching the homogeneous separability of the real
+    # LIBSVM sets these stand in for.
     u = jax.random.normal(k1, (d,))
+    u = u - jnp.mean(u)
     u = u / jnp.linalg.norm(u)
     rot = jax.random.normal(k2, (d, d)) / jnp.sqrt(d)
     xp = jax.random.normal(k3, (n_pos, d)) @ (jnp.eye(d) + 0.3 * rot) \

@@ -16,7 +16,11 @@ O(nblk·B²) = O(M·B) bytes instead of the full O(M²) Gram; the off-diagonal
 mass is only ever touched through the u refresh matmul, which itself can
 use an on-the-fly Gram (rbf_gram kernel) for memory-free operation.
 
-Grid: (nblk,). VMEM per step: B² + 4B floats (B=256 → 260 KB fp32).
+Grid: (nblk,) — or (K·nblk,) via :func:`solve_level`, which advances all K
+partitions of one SODM level in a single pallas_call per pass with
+warm-start support (Algorithm 1 line 12) and masked padding for
+non-tile-multiple partitions. VMEM per step: B² + 5B floats (B=256 →
+261 KB fp32).
 """
 from __future__ import annotations
 
@@ -29,7 +33,7 @@ from jax.experimental import pallas as pl
 Array = jax.Array
 
 
-def _cd_tile_kernel(q_ref, alpha_ref, u_ref, alpha_out, u_out, *,
+def _cd_tile_kernel(q_ref, alpha_ref, u_ref, valid_ref, alpha_out, u_out, *,
                     c: float, ups: float, theta: float, mscale: float,
                     n_steps: int):
     B = q_ref.shape[1]
@@ -38,6 +42,9 @@ def _cd_tile_kernel(q_ref, alpha_ref, u_ref, alpha_out, u_out, *,
     hz = q_diag + mscale * c * ups
     hb = q_diag + mscale * c
     h = jnp.concatenate([hz, hb])
+    # padded coordinates (valid = 0) are frozen at zero: their violation is
+    # masked so greedy never selects them and they never perturb u
+    valid2 = jnp.concatenate([valid_ref[0], valid_ref[0]])
 
     def step(t, carry):
         alpha, u = carry
@@ -46,13 +53,15 @@ def _cd_tile_kernel(q_ref, alpha_ref, u_ref, alpha_out, u_out, *,
         gb = -u + mscale * c * beta + (theta + 1.0)
         g = jnp.concatenate([gz, gb])
         viol = jnp.where(alpha > 0.0, jnp.abs(g), jnp.maximum(-g, 0.0))
+        viol = jnp.where(valid2 > 0.0, viol, 0.0)
         i = jnp.argmax(viol)
         sel = (jnp.arange(2 * B) == i).astype(alpha.dtype)        # one-hot 2B
         a_i = jnp.sum(alpha * sel)
         g_i = jnp.sum(g * sel)
         h_i = jnp.sum(h * sel)
+        v_i = jnp.sum(valid2 * sel)
         new_i = jnp.maximum(a_i - g_i / h_i, 0.0)
-        delta = new_i - a_i
+        delta = (new_i - a_i) * v_i
         alpha = alpha + delta * sel
         row_oh = sel[:B] - sel[B:]        # +1 for zeta coord, -1 for beta
         u = u + delta * (qblk @ row_oh)
@@ -68,13 +77,18 @@ def _cd_tile_kernel(q_ref, alpha_ref, u_ref, alpha_out, u_out, *,
                                              "n_steps", "interpret"))
 def cd_block_sweep(q_blocks: Array, alphas: Array, us: Array, *, c: float,
                    ups: float, theta: float, mscale: float, n_steps: int,
+                   valids: Array | None = None,
                    interpret: bool = False) -> tuple[Array, Array]:
     """Run n_steps greedy-CD updates inside every diagonal tile.
 
     q_blocks (nblk, B, B), alphas (nblk, 2B), us (nblk, B) ->
-    (alphas', us').
+    (alphas', us'). ``valids`` (nblk, B) marks real coordinates (1.0) vs
+    padding (0.0); padded coordinates are frozen at zero. Defaults to all
+    valid.
     """
     nblk, B, _ = q_blocks.shape
+    if valids is None:
+        valids = jnp.ones((nblk, B), q_blocks.dtype)
     kernel = functools.partial(_cd_tile_kernel, c=c, ups=ups, theta=theta,
                                mscale=mscale, n_steps=n_steps)
     return pl.pallas_call(
@@ -83,6 +97,7 @@ def cd_block_sweep(q_blocks: Array, alphas: Array, us: Array, *, c: float,
         in_specs=[
             pl.BlockSpec((1, B, B), lambda b: (b, 0, 0)),
             pl.BlockSpec((1, 2 * B), lambda b: (b, 0)),
+            pl.BlockSpec((1, B), lambda b: (b, 0)),
             pl.BlockSpec((1, B), lambda b: (b, 0)),
         ],
         out_specs=[
@@ -94,7 +109,7 @@ def cd_block_sweep(q_blocks: Array, alphas: Array, us: Array, *, c: float,
             jax.ShapeDtypeStruct(us.shape, us.dtype),
         ],
         interpret=interpret,
-    )(q_blocks, alphas, us)
+    )(q_blocks, alphas, us, valids)
 
 
 def extract_diag_blocks(Q: Array, block: int) -> Array:
@@ -106,51 +121,127 @@ def extract_diag_blocks(Q: Array, block: int) -> Array:
         Q, (b * block, b * block), (block, block)))(idx)
 
 
+def solve_level(q_blocks: Array, matvec, alphas0: Array, *, c: float,
+                ups: float, theta: float, mscale: float,
+                steps_per_pass: int | None = None, n_passes: int = 30,
+                tol: float = 1e-5, valid: Array | None = None,
+                us0: Array | None = None,
+                interpret: bool = False) -> tuple[Array, Array, Array]:
+    """Block-CD solve of K same-size partitions, one ``pallas_call`` per pass.
+
+    This is SODM's per-level engine: all K local ODM duals of one level are
+    advanced together — the tile kernel runs over a flat (K * nblk,) grid so
+    a whole level is a single kernel launch per pass, and the u refresh is
+    one batched matmul (or on-the-fly Gram matvec) supplied by ``matvec``.
+
+    Args:
+      q_blocks: (K, nblk, B, B) diagonal Gram blocks of each partition.
+      matvec:   callable (K, m) -> (K, m) computing per-partition Q_k @ g_k.
+                Supplied by the caller so the off-diagonal mass can live in a
+                materialized Q or be generated on the fly (rbf_gram kernel).
+      alphas0:  (K, 2m) warm starts — Algorithm 1 line 12 passes the merged
+                child solutions here; zeros give a cold start.
+      valid:    (m,) mask of real vs padded coordinates, shared by all
+                partitions (they are equal-sized). Padded coordinates stay
+                frozen at zero and are excluded from the KKT residual, so
+                padding never delays convergence or fakes violations.
+      us0:      optional (K, m) precomputed matvec(zeta0 - beta0) — u is
+                linear in alpha, so callers that already paid the matvec
+                (e.g. for a warm-start rescale) pass the scaled cache here
+                and skip the init matvec.
+
+    The outer while_loop is shared across partitions (Jacobi): it stops when
+    the *worst* partition's projected-KKT residual drops below tol. The KKT
+    of the warm start is evaluated before the first pass so an
+    already-optimal init returns 0 passes (Algorithm 1 line 5's early-stop
+    convergence check reads this).
+
+    Returns (alphas (K, 2m), kkts (K,), passes ()).
+    """
+    K, nblk, B, _ = q_blocks.shape
+    m = nblk * B
+    qb = q_blocks.reshape(K * nblk, B, B)
+    n_steps = 2 * B if steps_per_pass is None else steps_per_pass
+    if valid is None:
+        valid = jnp.ones((m,), q_blocks.dtype)
+    valid = valid.astype(q_blocks.dtype)
+    valids = jnp.tile(valid.reshape(nblk, B), (K, 1))      # (K*nblk, B)
+    valid2 = jnp.concatenate([valid, valid])[None, :]      # (1, 2m)
+
+    def kkt(alphas, us):
+        zetas, betas = alphas[:, :m], alphas[:, m:]
+        gz = us + mscale * c * ups * zetas + (theta - 1.0)
+        gb = -us + mscale * c * betas + (theta + 1.0)
+        g = jnp.concatenate([gz, gb], axis=1)
+        viol = jnp.where(alphas > 0.0, jnp.abs(g), jnp.maximum(-g, 0.0))
+        return jnp.max(jnp.where(valid2 > 0.0, viol, 0.0), axis=1)   # (K,)
+
+    def body(carry):
+        alphas, us, _, it = carry
+        zetas, betas = alphas[:, :m], alphas[:, m:]
+        a_t = jnp.concatenate([zetas.reshape(K, nblk, B),
+                               betas.reshape(K, nblk, B)],
+                              axis=2).reshape(K * nblk, 2 * B)
+        a_t, _ = cd_block_sweep(qb, a_t, us.reshape(K * nblk, B), c=c,
+                                ups=ups, theta=theta, mscale=mscale,
+                                n_steps=n_steps, valids=valids,
+                                interpret=interpret)
+        a_t = a_t.reshape(K, nblk, 2 * B)
+        z_new = a_t[:, :, :B].reshape(K, m)
+        b_new = a_t[:, :, B:].reshape(K, m)
+        # exact line search along each partition's joint Jacobi step:
+        # f(alpha + t·d) is quadratic in t and u moves linearly, so the
+        # optimal damping is closed-form and reuses this pass's one
+        # matvec. t = 1 when tiles don't conflict; t < 1 tames
+        # off-diagonal mass that would otherwise make simultaneous tile
+        # updates diverge (weakly regularized / Q-dominant duals).
+        dz, db = z_new - zetas, b_new - betas
+        u_d = matvec(dz - db)
+        gz = us + mscale * c * ups * zetas + (theta - 1.0)
+        gb = -us + mscale * c * betas + (theta + 1.0)
+        gdot = jnp.sum(gz * dz + gb * db, axis=1)
+        quad = jnp.sum((dz - db) * u_d, axis=1) + mscale * c * jnp.sum(
+            ups * dz * dz + db * db, axis=1)
+        t = jnp.where(quad > 0.0,
+                      jnp.clip(-gdot / jnp.maximum(quad, 1e-30), 0.0, 1.0),
+                      1.0)[:, None]
+        zetas, betas = zetas + t * dz, betas + t * db
+        alphas = jnp.concatenate([zetas, betas], axis=1)
+        us = us + t * u_d
+        return alphas, us, kkt(alphas, us), it + 1
+
+    def cond(carry):
+        _, _, r, it = carry
+        return jnp.logical_and(it < n_passes, jnp.max(r) > tol)
+
+    if us0 is None:
+        zetas0, betas0 = alphas0[:, :m], alphas0[:, m:]
+        us0 = matvec(zetas0 - betas0)
+    init = (alphas0, us0, kkt(alphas0, us0), jnp.int32(0))
+    alphas, _, r, it = jax.lax.while_loop(cond, body, init)
+    return alphas, r, it
+
+
 def solve(Q: Array, *, c: float, ups: float, theta: float, mscale: float,
           block: int = 256, steps_per_pass: int | None = None,
-          n_passes: int = 30, tol: float = 1e-5,
+          n_passes: int = 30, tol: float = 1e-5, alpha0: Array | None = None,
+          valid: Array | None = None,
           interpret: bool = False) -> tuple[Array, Array, Array]:
     """Full block-CD solve driven by the Pallas tile kernel.
 
     Outer loop (lax.while_loop): refresh u = Q gamma (MXU matmul), run the
     tile kernel on all diagonal blocks, check the global projected-KKT
-    residual. Returns (alpha, kkt, passes).
+    residual. ``alpha0`` is the warm start (defaults to zeros); a
+    warm start already within tol returns 0 passes. ``valid`` marks real
+    vs padded coordinates (see :func:`solve_level`). Returns
+    (alpha, kkt, passes).
     """
     M = Q.shape[0]
     assert M % block == 0, (M, block)
-    nblk = M // block
-    n_steps = 2 * block if steps_per_pass is None else steps_per_pass
-    qb = extract_diag_blocks(Q, block)
-
-    def kkt(alpha, u):
-        zeta, beta = alpha[:M], alpha[M:]
-        gz = u + mscale * c * ups * zeta + (theta - 1.0)
-        gb = -u + mscale * c * beta + (theta + 1.0)
-        g = jnp.concatenate([gz, gb])
-        a = jnp.concatenate([zeta, beta])
-        return jnp.max(jnp.where(a > 0.0, jnp.abs(g), jnp.maximum(-g, 0.0)))
-
-    def body(carry):
-        alpha, _, it = carry
-        zeta, beta = alpha[:M], alpha[M:]
-        u = Q @ (zeta - beta)
-        a_t = jnp.concatenate([zeta.reshape(nblk, block),
-                               beta.reshape(nblk, block)], axis=1)
-        u_t = u.reshape(nblk, block)
-        a_t, _ = cd_block_sweep(qb, a_t, u_t, c=c, ups=ups, theta=theta,
-                                mscale=mscale, n_steps=n_steps,
-                                interpret=interpret)
-        zeta = a_t[:, :block].reshape(M)
-        beta = a_t[:, block:].reshape(M)
-        alpha = jnp.concatenate([zeta, beta])
-        u = Q @ (zeta - beta)
-        return alpha, kkt(alpha, u), it + 1
-
-    def cond(carry):
-        _, r, it = carry
-        return jnp.logical_and(it < n_passes, r > tol)
-
-    alpha0 = jnp.zeros(2 * M, Q.dtype)
-    alpha, r, it = jax.lax.while_loop(
-        cond, body, (alpha0, jnp.array(jnp.inf, Q.dtype), jnp.int32(0)))
-    return alpha, r, it
+    qb = extract_diag_blocks(Q, block)[None]               # (1, nblk, B, B)
+    a0 = jnp.zeros(2 * M, Q.dtype) if alpha0 is None else alpha0
+    alphas, r, it = solve_level(
+        qb, lambda g: g @ Q, a0[None], c=c, ups=ups, theta=theta,
+        mscale=mscale, steps_per_pass=steps_per_pass, n_passes=n_passes,
+        tol=tol, valid=valid, interpret=interpret)
+    return alphas[0], r[0], it

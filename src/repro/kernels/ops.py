@@ -70,24 +70,55 @@ def rbf_gram(x: Array, z: Array, gamma: float, *, yx: Array | None = None,
 
 def dual_cd_solve(Q: Array, *, c: float, ups: float, theta: float,
                   mscale: float, block: int = 256, n_passes: int = 50,
-                  tol: float = 1e-5) -> tuple[Array, Array, Array]:
+                  tol: float = 1e-5, steps_per_pass: int | None = None,
+                  alpha0: Array | None = None) -> tuple[Array, Array, Array]:
     """Solve the ODM dual with the Pallas tile kernel. Pads M to the block.
 
-    Padded coordinates have zero Gram rows; their optimal value for zeta is
-    max(-(theta-1)/h, 0) > 0, so we pin them by masking after the solve —
-    correctness is unaffected because padded rows never couple (Q rows are
-    zero) and the returned alpha strips them anyway.
+    ``alpha0`` (2M,) is the warm start (SODM Algorithm 1 line 12); zeros
+    when omitted. Padded coordinates are masked inside the tile kernel
+    (frozen at zero, excluded from the KKT residual), so padding neither
+    moves spurious coordinates nor delays the 0-pass warm-start exit.
     """
     M = Q.shape[0]
     block = min(block, M)
     Qp, _ = _pad_to(Q, 0, block)
     Qp, _ = _pad_to(Qp, 1, block)
+    Mp = Qp.shape[0]
+    a0 = None
+    if alpha0 is not None:
+        a0 = jnp.zeros(2 * Mp, Q.dtype) \
+            .at[:M].set(alpha0[:M]).at[Mp:Mp + M].set(alpha0[M:])
+    valid = (jnp.arange(Mp) < M).astype(Q.dtype) if Mp != M else None
     alpha, kkt, passes = _cd.solve(
         Qp, c=c, ups=ups, theta=theta, mscale=mscale, block=block,
-        n_passes=n_passes, tol=tol, interpret=_INTERPRET)
-    Mp = Qp.shape[0]
+        n_passes=n_passes, tol=tol, steps_per_pass=steps_per_pass,
+        alpha0=a0, valid=valid, interpret=_INTERPRET)
     zeta, beta = alpha[:Mp], alpha[Mp:]
     return jnp.concatenate([zeta[:M], beta[:M]]), kkt, passes
+
+
+def rbf_gram_matvec(x: Array, g: Array, *, gamma: float,
+                    y: Array | None = None, bm: int = 256, bn: int = 256,
+                    bd: int = 512) -> Array:
+    """u[k] = Q_k @ g[k] with Q the (signed) RBF Gram, never materialized.
+
+    x (K, m, d) batched partitions, g (K, m); y (K, m) labels make it the
+    signed product Q = y yᵀ ⊙ K via u = y ⊙ (K @ (y ⊙ g)). Pads m and d to
+    tile multiples — padded g entries are zero so padded rows contribute
+    nothing, and padded outputs are sliced off. Per-partition memory is
+    O(m·B) (one Gram tile), not O(m²).
+    """
+    K, M, D = x.shape
+    bm = min(bm, max(8, M))
+    bn = min(bn, max(8, M))
+    bd = min(bd, max(8, D))
+    gs = g if y is None else y * g
+    xp, _ = _pad_to(x, 1, max(bm, bn))
+    xp, _ = _pad_to(xp, 2, bd)
+    gp, _ = _pad_to(gs, 1, max(bm, bn))
+    u = _rg.rbf_gram_matvec(xp, xp, gp, gamma=gamma, bm=bm, bn=bn, bd=bd,
+                            interpret=_INTERPRET)[:, :M]
+    return u if y is None else y * u
 
 
 # ---------------------------------------------------------------------------

@@ -152,6 +152,8 @@ def _cell(arch: str, shape_name: str, multi_pod: bool,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):     # one-dict-per-device on old jax
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     coll = ha.collective_bytes(hlo)
 

@@ -146,7 +146,11 @@ def _multiplicities(comps: dict[str, list[str]], entry: str) -> dict[str, float]
                            r"\s*body=%?([\w\.\-]+)", ln)
             if wm:
                 cond, body = wm.group(1), wm.group(2)
-                trips = _trip_count(comps.get(cond, []))
+                # XLA annotates scan-lowered loops with the exact trip
+                # count; prefer it over parsing the condition computation
+                km = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', ln)
+                trips = int(km.group(1)) if km \
+                    else _trip_count(comps.get(cond, []))
                 for target, k in ((cond, trips + 1), (body, trips)):
                     if target in comps:
                         mult[target] += m * k
@@ -212,6 +216,53 @@ _DEF_RE = re.compile(r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*"
 _DOT_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 
 
+def _dot_operands(ln: str) -> list[str]:
+    """Operand names of a `dot(...)` call.
+
+    Current jaxlibs print typed operands — `dot(f32[64,64]{1,0} %a, ...)` —
+    older ones plain `dot(%a, %b)`; dot operands are always arrays (never
+    tuples) so the call contains no nested parens and each operand's name
+    is the last %-token (or bare token) of its argument.
+    """
+    m = re.search(r"\bdot\(([^)]*)\)", ln)
+    if not m:
+        return []
+    inside = m.group(1)
+    names = re.findall(r"%([\w\.\-]+)", inside)
+    if names:
+        return names
+    # %-less operands: shape literals (f32[64,32]{1,0}) contain commas, so
+    # split on top-level commas only and take each argument's last token
+    args: list[str] = []
+    depth, cur = 0, []
+    for ch in inside:
+        if ch in "[{":
+            depth += 1
+        elif ch in "]}":
+            depth -= 1
+        elif ch == "," and depth == 0:
+            args.append("".join(cur))
+            cur = []
+            continue
+        cur.append(ch)
+    args.append("".join(cur))
+    return [a.split()[-1] for a in args if a.strip()]
+
+
+def xla_flops(compiled) -> float:
+    """FLOPs reported by XLA's cost model for a jax ``Compiled`` object.
+
+    ``Compiled.cost_analysis()`` returns a dict on current JAX and a
+    one-dict-per-device list on older versions; normalize both. This is the
+    number :func:`dot_flops` corrects — XLA counts a while body once
+    regardless of trip count.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return float(ca.get("flops", 0.0))
+
+
 def _first_shape(shape_text: str) -> tuple[str, list[int]]:
     m = _SHAPE_RE.search(shape_text)
     if not m:
@@ -248,10 +299,10 @@ def dot_flops(hlo: str) -> float:
                 continue
             _, out_dims = _first_shape(dm.group(2))
             cm = _DOT_CONTRACT_RE.search(ln)
-            ops = re.findall(r"dot\(%?([\w\.\-]+),\s*%?([\w\.\-]+)\)", ln)
-            if not ops:
+            operands = _dot_operands(ln)
+            if not operands:
                 continue
-            lhs = shapes.get(ops[0][0], [])
+            lhs = shapes.get(operands[0], [])
             contract = 1
             if cm and cm.group(1):
                 for d in cm.group(1).split(","):

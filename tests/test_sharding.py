@@ -11,8 +11,8 @@ def _mesh():
     # 1-device mesh with the production axis names: resolution logic is
     # shape-driven, so axis sizes of 1 exercise the same code paths; the
     # divisibility tests use fake sizes via the fake-mesh helper below.
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    # shd.make_mesh papers over the jax.make_mesh axis_types API skew.
+    return shd.make_mesh((1, 1), ("data", "model"))
 
 
 class FakeMesh:

@@ -2,6 +2,10 @@
 valid instance, and core solver invariants must be maintained."""
 import jax
 import jax.numpy as jnp
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import dual_cd, kernel_fns as kf, odm, partition as part, theory

@@ -137,6 +137,12 @@ class TestSyntheticDatasets:
         assert 0.15 < frac < 0.35
 
     def test_linearly_separable_enough(self):
+        # Root cause of the historical 0.757 plateau: GD converged fine,
+        # but make_blobs drew the class-mean direction with a nonzero mean,
+        # so after [0,1] min-max scaling the boundary no longer passed
+        # through the origin — unreachable for the bias-free linear ODM.
+        # Fixed in the generator (zero-mean direction + sep recalibrated to
+        # the paper band), not by loosening this threshold.
         from repro.core import odm
         from repro.data import synthetic
         ds = synthetic.load("svmguide1", scale=0.1)
