@@ -1,7 +1,16 @@
 """Pallas kernel micro-benchmarks: interpret-mode correctness timing plus
 the XLA-path equivalents they replace (the wall-clock numbers that matter
 are TPU-only; on CPU we report the ref-path timings and the kernels'
-arithmetic intensities for the roofline discussion)."""
+arithmetic intensities for the roofline discussion).
+
+Also reports the fused-pass op-count comparison: the PR 1 pallas layout
+paid one ``pallas_call`` (tile sweeps) + one separate matvec per pass;
+the fused pass kernel issues exactly ONE ``pallas_call`` per pass with
+the Gram matvec accumulated in-kernel (matvecs per pass reduced by 1).
+
+``run(out, quick=True)`` shrinks every size so the CI smoke tier can
+execute the full script path in seconds (tests/test_benchmarks_smoke.py).
+"""
 from __future__ import annotations
 
 import jax
@@ -14,10 +23,12 @@ from repro.kernels import ref
 KEY = jax.random.PRNGKey(0)
 
 
-def run(out):
+def run(out, quick: bool = False):
     out.append("# kernels: name,config,seconds,derived")
     # rbf gram XLA path (the kernel's oracle) at a few sizes
-    for M, D in ((1024, 128), (2048, 256), (4096, 256)):
+    gram_sizes = ((256, 32),) if quick else ((1024, 128), (2048, 256),
+                                             (4096, 256))
+    for M, D in gram_sizes:
         x = jax.random.normal(KEY, (M, D))
         f = jax.jit(lambda a: ref.rbf_gram(a, a, 0.5))
         t, _ = timed(f, x, warmup=1, iters=3)
@@ -25,9 +36,27 @@ def run(out):
         out.append(f"kernels,rbf_gram_xla,M={M}_D={D},{t:.4f},"
                    f"gflops={flops / t / 1e9:.1f}")
 
+    # matrix-free gram matvec, every KernelSpec family (the SODM u-refresh
+    # path above gram_threshold) vs the dense einsum it replaces
+    from repro.kernels import ops
+    Km, m, d = (2, 64, 8) if quick else (4, 512, 32)
+    xb = jax.random.normal(KEY, (Km, m, d))
+    yb = jnp.sign(jax.random.normal(jax.random.fold_in(KEY, 9), (Km, m)))
+    g = jax.random.normal(jax.random.fold_in(KEY, 10), (Km, m))
+    for name in kf.KERNELS:
+        spec = kf.make_spec(name, gamma=0.5, degree=2, coef0=1.0)
+        t, _ = timed(lambda xb=xb, g=g, spec=spec: ops.gram_matvec(
+            xb, g, spec, y=yb, bm=min(64, m), bn=min(64, m)),
+            warmup=1, iters=2)
+        Qs = jax.vmap(lambda xk, yk: kf.signed_gram(spec, xk, yk))(xb, yb)
+        td, _ = timed(lambda Qs=Qs: jnp.einsum("kij,kj->ki", Qs, g),
+                      warmup=1, iters=2)
+        out.append(f"kernels,gram_matvec_{name},K={Km}_m={m},{t:.4f},"
+                   f"family={spec.family()}_dense_einsum={td:.4f}")
+
     # flash attention XLA-scan path
     from repro.models import attention as A
-    for T in (512, 1024):
+    for T in ((256,) if quick else (512, 1024)):
         q = jax.random.normal(KEY, (1, T, 8, 64)) * 0.3
         k = jax.random.normal(jax.random.fold_in(KEY, 1), (1, T, 4, 64)) * 0.3
         v = jax.random.normal(jax.random.fold_in(KEY, 2), (1, T, 4, 64)) * 0.3
@@ -40,7 +69,7 @@ def run(out):
 
     # dual CD: paper-style scalar sweeps vs block-Gauss-Southwell
     from repro.core import dual_cd, odm
-    M = 1024
+    M = 256 if quick else 1024
     x = jax.random.normal(KEY, (M, 16))
     y = jnp.sign(jax.random.normal(jax.random.fold_in(KEY, 3), (M,)))
     Q = kf.signed_gram(kf.KernelSpec("rbf", 0.5), x, y)
@@ -55,11 +84,49 @@ def run(out):
     out.append(f"kernels,dual_cd_block,M={M},{t2:.4f},"
                f"speedup_vs_scalar={t1 / t2:.2f}")
 
+    # fused pass vs PR 1 layout: pallas_calls + matvec launches per pass.
+    # The legacy pass = one cd_block_sweep pallas_call + one separate
+    # gram_matvec pallas_call; the fused pass folds the matvec into the
+    # sweep kernel — counted by tracing one pass of each.
+    from repro.kernels import dual_cd_block as cdk, gram as gram_mod
+    Kf, mf, Bf, df = 2, 64, 32, 8
+    xf = jax.random.normal(jax.random.fold_in(KEY, 6), (Kf, mf, df))
+    yf = jnp.sign(jax.random.normal(jax.random.fold_in(KEY, 7), (Kf, mf)))
+    spec = kf.KernelSpec("rbf", 0.5)
+    qbf = jax.vmap(lambda q: cdk.extract_diag_blocks(q, Bf))(
+        jax.vmap(lambda xk, yk: kf.signed_gram(spec, xk, yk))(xf, yf))
+    af = jnp.zeros((Kf, mf // Bf, 2 * Bf))
+    uf = jnp.zeros((Kf, mf // Bf, Bf))
+    vf = jnp.ones((Kf, mf // Bf, Bf))
+    src = gram_mod.make_kernel_source(spec, xf, yf, bm=Bf, bn=Bf,
+                                      interpret=True)
+    cdkw = dict(c=p.c, ups=p.ups, theta=p.theta, mscale=float(mf))
+    fused = ops.count_pallas_calls(lambda: cdk.fused_cd_pass(
+        qbf, src, af, uf, vf, n_steps=2 * Bf, exit_tol=0.0,
+        interpret=True, **cdkw))
+
+    def legacy_pass():
+        a2, _ = cdk.cd_block_sweep(
+            qbf.reshape(-1, Bf, Bf), af.reshape(-1, 2 * Bf),
+            uf.reshape(-1, Bf), n_steps=2 * Bf, interpret=True, **cdkw)
+        u_d = src.matvec(jnp.zeros((Kf, mf)))
+        return a2, u_d
+
+    # the legacy constituents are jitted; clear their trace caches so the
+    # counter sees every pallas_call even if earlier sections traced them
+    cdk.cd_block_sweep.clear_cache()
+    gram_mod.gram_matvec.clear_cache()
+    legacy = ops.count_pallas_calls(legacy_pass)
+    out.append(f"kernels,fused_pass_op_count,K={Kf}_m={mf},"
+               f"{fused:d},pallas_calls_per_pass_fused={fused}_legacy="
+               f"{legacy}_matvec_launches_saved={legacy - fused}")
+    assert fused == 1, fused
+
     # SODM per-level solve: one whole level (K partitions of m rows)
     # through each engine — the hot path the solver-engine layer routes
     from repro.core import engines
     spec = kf.KernelSpec("rbf", 0.5)
-    K_parts, m = 8, 256
+    K_parts, m = (2, 64) if quick else (8, 256)
     xs = jax.random.normal(jax.random.fold_in(KEY, 4), (K_parts, m, 16))
     ys = jnp.sign(jax.random.normal(jax.random.fold_in(KEY, 5),
                                     (K_parts, m)))

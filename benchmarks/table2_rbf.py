@@ -27,12 +27,16 @@ CFG_BLOCK = sodm.SODMConfig(p=2, levels=3, n_landmarks=8, tol=1e-4,
                             max_sweeps=200, engine="block")
 
 
-def run(out):
+def run(out, datasets=None, scale_factor: float = 1.0):
+    """``datasets``/``scale_factor`` let the CI smoke tier execute the full
+    script path on one tiny data set (tests/test_benchmarks_smoke.py)."""
     out.append("# table2_rbf: dataset,method,acc,seconds")
     wins_acc = 0
     wins_time = 0
-    for name in DATASETS:
-        ds = synthetic.load(name, scale=SCALE[name], max_d=256)
+    datasets = DATASETS if datasets is None else datasets
+    for name in datasets:
+        ds = synthetic.load(name, scale=SCALE[name] * scale_factor,
+                            max_d=256)
         M = ds.x_train.shape[0] - ds.x_train.shape[0] % 8
         x, y = ds.x_train[:M], ds.y_train[:M]
         key = jax.random.PRNGKey(0)
@@ -79,5 +83,5 @@ def run(out):
             wins_time += 1
         for m, (a, t) in results.items():
             out.append(f"table2,{name},{m},{a:.4f},{t:.2f}")
-    out.append(f"table2,summary,SODM_best_acc_on,{wins_acc}/{len(DATASETS)},"
-               f"fastest_on={wins_time}/{len(DATASETS)}")
+    out.append(f"table2,summary,SODM_best_acc_on,{wins_acc}/{len(datasets)},"
+               f"fastest_on={wins_time}/{len(datasets)}")

@@ -20,13 +20,17 @@ Three engines, selected by ``SODMConfig.engine``:
   (:func:`repro.core.dual_cd.solve_block`) vmapped over partitions. The
   XLA oracle of the Pallas path; runs anywhere.
 
-* ``"pallas"`` — greedy (Gauss-Southwell) block CD via the Pallas tile
-  kernel (:mod:`repro.kernels.dual_cd_block`). The whole level's diagonal
-  tiles run in ONE ``pallas_call`` per pass (grid ``(K * m/B,)``), and the
-  cross-tile u refresh is a single batched matmul. When a partition
-  outgrows ``gram_threshold`` (and the kernel is RBF), the u refresh
-  switches to on-the-fly Gram tiles from the ``rbf_gram`` kernel, keeping
-  per-level memory O(m·B) instead of the O(m²) of a materialized Q.
+* ``"pallas"`` — greedy (Gauss-Southwell) block CD via the *fused* Pallas
+  pass kernel (:mod:`repro.kernels.dual_cd_block`): every pass of a level
+  is ONE ``pallas_call`` that runs all diagonal-tile sweeps AND the
+  cross-tile Gram matvec the line search needs (no separate per-pass XLA
+  matmul). When a partition outgrows ``gram_threshold``, the Gram tiles
+  are rebuilt on the fly from the raw features for EVERY ``KernelSpec``
+  family (rbf / laplacian / poly / linear — see
+  :mod:`repro.kernels.gram`), keeping per-level memory O(m·B) instead of
+  the O(m²) of a materialized Q. A kernel without a matrix-free lowering
+  above the threshold triggers a one-time warning with the memory
+  estimate before falling back to a materialized Q — never silently.
 
 Engines are plain closures so they can be jitted by the caller with
 ``spec``/``params``/``tol``/``max_sweeps`` static and used unchanged
@@ -34,6 +38,7 @@ inside ``shard_map`` bodies.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Protocol
 
 import jax
@@ -46,6 +51,30 @@ from repro.core.odm import ODMParams
 Array = jax.Array
 
 ENGINES = ("scalar", "block", "pallas")
+
+# kernel names already warned about falling back to a materialized Q
+_MATERIALIZED_WARNED: set[str] = set()
+
+
+def _warn_materialized_fallback(name: str, K: int, m: int,
+                                itemsize: int) -> None:
+    """One-time warning when a kernel has no matrix-free Gram path.
+
+    After the matrix-free Gram subsystem every ``KernelSpec`` family has
+    one, so this only fires for kernels added without a tile lowering —
+    but it must never be silent: the fallback allocates the full O(m²)
+    Gram per partition.
+    """
+    if name in _MATERIALIZED_WARNED:
+        return
+    _MATERIALIZED_WARNED.add(name)
+    gib = K * m * m * itemsize / 2 ** 30
+    warnings.warn(
+        f"kernel {name!r} has no matrix-free Gram lowering; the pallas "
+        f"engine is materializing K={K} Gram blocks of {m}x{m} "
+        f"(~{gib:.2f} GiB) despite gram_threshold — add the kernel to "
+        f"repro.kernels.gram or lower gram_threshold expectations.",
+        RuntimeWarning, stacklevel=3)
 
 
 def _rescale_warm_start(Q: Array, ak: Array, params: ODMParams,
@@ -121,8 +150,10 @@ def solve_level_block(xs: Array, ys: Array, alphas: Array, *,
 def solve_level_pallas(xs: Array, ys: Array, alphas: Array, *,
                        spec: kf.KernelSpec, params: ODMParams, tol: float,
                        max_sweeps: int, block: int = 256,
-                       gram_threshold: int = 4096) -> tuple[Array, Array, Array]:
+                       gram_threshold: int = 4096,
+                       adaptive: bool = True) -> tuple[Array, Array, Array]:
     from repro.kernels import dual_cd_block as cdk
+    from repro.kernels import gram as gram_mod
     from repro.kernels import ops
 
     K, m, _ = xs.shape
@@ -140,37 +171,38 @@ def solve_level_pallas(xs: Array, ys: Array, alphas: Array, *,
     a0 = jnp.concatenate([jnp.pad(z0, ((0, 0), (0, pad))),
                           jnp.pad(b0, ((0, 0), (0, pad)))], axis=1)
 
-    matrix_free = spec.name == "rbf" and m > gram_threshold
+    matrix_free = (m > gram_threshold
+                   and spec.name in gram_mod.MATRIX_FREE_KERNELS)
+    if m > gram_threshold and not matrix_free:
+        _warn_materialized_fallback(spec.name, K, mp, xs.dtype.itemsize)
     if matrix_free:
-        # diagonal Gram tiles only: (K, nblk, B, B) — O(m·B) per partition
+        # diagonal Gram tiles only: (K, nblk, B, B) — O(m·B) per partition;
+        # the off-diagonal mass is regenerated tile-by-tile inside the
+        # fused pass kernel and never materialized
         x_t = xp.reshape(K * nblk, B, -1)
         y_t = yp.reshape(K * nblk, B)
         qb = jax.vmap(lambda xb, yb: kf.signed_gram(spec, xb, yb))(x_t, y_t)
         qb = qb.reshape(K, nblk, B, B)
-
-        def matvec(g):
-            return ops.rbf_gram_matvec(xp, g, gamma=spec.gamma, y=yp, bm=B,
-                                       bn=B)
+        src = gram_mod.make_kernel_source(spec, xp, yp, bm=B, bn=B,
+                                          interpret=ops._INTERPRET)
     else:
         Qp = jax.vmap(lambda xk, yk: kf.signed_gram(spec, xk, yk))(xp, yp)
         Qp = Qp * (valid[None, :, None] * valid[None, None, :])
         qb = jax.vmap(lambda q: cdk.extract_diag_blocks(q, B))(Qp)
-
-        def matvec(g):
-            return jnp.einsum("kij,kj->ki", Qp, g)
+        src = gram_mod.DenseSource(Qp)
 
     # warm-start ray rescale, batched over partitions; u is linear in
     # alpha so the rescaled cache rides along to the solver for free
-    u0 = matvec(a0[:, :mp] - a0[:, mp:])
+    u0 = src.matvec(a0[:, :mp] - a0[:, mp:])
     t = jax.vmap(lambda u, a: odm.warm_start_scale(u, a, params,
                                                    float(m)))(u0, a0)
     a0 = a0 * t[:, None]
     u0 = u0 * t[:, None]
 
     out, kkts, passes = cdk.solve_level(
-        qb, matvec, a0, c=params.c, ups=params.ups, theta=params.theta,
+        qb, src, a0, c=params.c, ups=params.ups, theta=params.theta,
         mscale=float(m), n_passes=max_sweeps, tol=tol, valid=valid,
-        us0=u0, interpret=ops._INTERPRET)
+        us0=u0, adaptive=adaptive, interpret=ops._INTERPRET)
     alphas = jnp.concatenate([out[:, :m], out[:, mp:mp + m]], axis=1)
     sweeps = jnp.full((K,), passes, jnp.int32)
     return alphas, sweeps, kkts
@@ -181,7 +213,8 @@ def solve_level_pallas(xs: Array, ys: Array, alphas: Array, *,
 # ---------------------------------------------------------------------------
 
 def make_local_solver(engine: str = "scalar", block: int = 256,
-                      gram_threshold: int = 4096) -> LocalSolver:
+                      gram_threshold: int = 4096,
+                      adaptive: bool = True) -> LocalSolver:
     """Resolve an engine name (``SODMConfig.engine``) to a LocalSolver."""
     if engine == "scalar":
         return solve_level_scalar
@@ -196,6 +229,7 @@ def make_local_solver(engine: str = "scalar", block: int = 256,
             return solve_level_pallas(xs, ys, alphas, spec=spec,
                                       params=params, tol=tol,
                                       max_sweeps=max_sweeps, block=block,
-                                      gram_threshold=gram_threshold)
+                                      gram_threshold=gram_threshold,
+                                      adaptive=adaptive)
         return _pallas
     raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")

@@ -4,9 +4,9 @@ Everything is pure jnp and jit-safe. Kernels are exposed both as
 ``KernelSpec`` (a small pytree-friendly description that can be threaded
 through shard_map'd code) and as plain functions.
 
-The RBF Gram computation is the nonlinear-kernel hot spot of the paper;
-the tiled Pallas implementation lives in ``repro.kernels.rbf_gram`` and is
-validated against :func:`rbf_gram` here.
+The Gram computation is the nonlinear-kernel hot spot of the paper; the
+tiled matrix-free Pallas lowering of every family here lives in
+``repro.kernels.gram`` and is validated against these pure-jnp grams.
 """
 from __future__ import annotations
 
@@ -38,6 +38,23 @@ class KernelSpec:
 
     def is_shift_invariant(self) -> bool:
         return self.name in ("rbf", "laplacian")
+
+    def family(self) -> str:
+        """Accumulation family of the matrix-free Gram lowering.
+
+        ``"l2"`` kernels (rbf/poly/linear) build their tiles from the
+        ``x @ z.T`` cross term on the MXU; ``"l1"`` kernels (laplacian)
+        need a tiled L1 reduction on the VPU (no matmul form exists).
+        Delegates to :mod:`repro.kernels.gram` (the lowering itself) so
+        there is exactly one registry of the split.
+        """
+        from repro.kernels import gram  # deferred: core must stay
+        #                                 importable without kernels
+        if self.name in gram.L1_KERNELS:
+            return "l1"
+        if self.name in gram.MATRIX_FREE_KERNELS:
+            return "l2"
+        raise ValueError(f"no matrix-free lowering for {self.name!r}")
 
     def diag_value(self) -> float:
         """kappa(x, x) for shift-invariant kernels (the r^2 of Theorem 2)."""

@@ -50,10 +50,13 @@ run, so it is pluggable: ``SODMConfig.engine`` selects a
   paper-faithful reference. Latency-bound on accelerators.
 * ``"block"``  — pure-jnp block-Gauss-Seidel (exact CD inside VMEM-sized
   tiles, Jacobi across tiles). The XLA oracle of the Pallas path.
-* ``"pallas"`` — the greedy block-CD Pallas tile kernel: one
-  ``pallas_call`` per pass for the whole level, warm starts included;
-  partitions larger than ``SODMConfig.gram_threshold`` refresh the dual
-  cache u = Q (zeta - beta) from on-the-fly ``rbf_gram`` tiles so
+* ``"pallas"`` — the greedy block-CD *fused* Pallas pass kernel: one
+  ``pallas_call`` per pass runs the whole level's tile sweeps AND the
+  cross-tile Gram matvec (no separate per-pass matmul), warm starts
+  included; tiles early-exit their sweep at in-tile KKT <= tol (adaptive
+  steps_per_pass). Partitions larger than ``SODMConfig.gram_threshold``
+  rebuild Gram tiles on the fly from the raw features for every kernel
+  family (rbf / laplacian / poly / linear — ``repro.kernels.gram``), so
   per-level memory stays O(m·B) instead of O(m²).
 
 All engines honor Algorithm 1's warm starts (line 12) and report 0
@@ -92,9 +95,14 @@ class SODMConfig:
     partition_strategy: str = "stratified"   # stratified | random | cluster
     engine: str = "scalar"     # scalar | block | pallas (see module docs)
     block: int = 256           # VMEM tile size of the block/pallas engines
-    gram_threshold: int = 4096  # pallas: partitions above this refresh u
-    #                             from on-the-fly rbf_gram tiles (O(m·B)
-    #                             memory) instead of a materialized Q
+    gram_threshold: int = 4096  # pallas: partitions above this rebuild
+    #                             Gram tiles on the fly (repro.kernels.gram,
+    #                             O(m·B) memory, all kernel families)
+    #                             instead of materializing the O(m²) Q
+    adaptive: bool = True      # pallas: tiles early-exit their greedy
+    #                            sweep at in-tile KKT <= 0.01*tol (never
+    #                            changes the outer exact-KKT convergence
+    #                            check)
 
 
 class SODMResult(NamedTuple):
@@ -155,7 +163,8 @@ def solve(spec: kf.KernelSpec, x: Array, y: Array, params: ODMParams,
 
     level = cfg.levels
     solver = engines.make_local_solver(cfg.engine, block=cfg.block,
-                                       gram_threshold=cfg.gram_threshold)
+                                       gram_threshold=cfg.gram_threshold,
+                                       adaptive=cfg.adaptive)
     solve_jit = jax.jit(solver,
                         static_argnames=("spec", "params", "tol", "max_sweeps"))
     while True:
@@ -230,7 +239,8 @@ def solve_sharded(spec: kf.KernelSpec, x: Array, y: Array, params: ODMParams,
     level = cfg.levels
 
     solver = engines.make_local_solver(cfg.engine, block=cfg.block,
-                                       gram_threshold=cfg.gram_threshold)
+                                       gram_threshold=cfg.gram_threshold,
+                                       adaptive=cfg.adaptive)
     body = partial(solver, spec=spec, params=params, tol=cfg.tol,
                    max_sweeps=cfg.max_sweeps)
     repl_jit = jax.jit(solver,

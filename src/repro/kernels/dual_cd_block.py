@@ -7,20 +7,34 @@ step computes the full projected-gradient vector for the tile's 2B
 coordinates (vectorized), picks the worst violator (argmax), and applies
 the exact univariate update via a one-hot masked rank-1 update of the
 cache u. Each step is O(B) VPU work + one (B,B)x(B,) product — fully
-vectorized, no scalar HBM round-trips. Cross-tile coupling is handled by
-the caller refreshing u = Q gamma with an MXU matmul between passes
-(Jacobi across tiles), mirroring repro.core.dual_cd.solve_block.
+vectorized, no scalar HBM round-trips. A tile *early-exits* its sweep once
+its in-tile projected-KKT residual drops below the solver tolerance
+(adaptive steps_per_pass), so greedy CD stops wasting steps on converged
+tiles; convergence itself is still decided by the exact full-problem KKT
+residual in the outer pass loop, never by the in-tile exit.
 
-Memory: only the (B, B) *diagonal* Gram blocks enter the kernel —
-O(nblk·B²) = O(M·B) bytes instead of the full O(M²) Gram; the off-diagonal
-mass is only ever touched through the u refresh matmul, which itself can
-use an on-the-fly Gram (rbf_gram kernel) for memory-free operation.
+Fused pass (:func:`fused_cd_pass`): one ``pallas_call`` advances a whole
+SODM level — every diagonal tile's greedy sweep AND the cross-tile Gram
+matvec u_d = Q (dz - db) needed by the Jacobi line search. The grid is
+(K, nblk_i, nblk_j[, n_d]): for each CD tile i (outer), the sweep runs
+once (at j = 0) and its step d_i is held in VMEM scratch while the j sweep
+streams Gram tiles — materialized (B, B) blocks of Q (DenseSource) or
+on-the-fly tiles built from the raw features with the shared accumulation
+skeleton in :mod:`repro.kernels.gram` (KernelSource) — and accumulates
+K(j, i) @ d_i straight into the resident (1, mp) u_d output block. The
+Gram tile never leaves VMEM and the separate per-pass XLA matmul (or
+second matvec kernel launch) of the unfused path disappears: HBM traffic
+per pass drops from (kernel read + matmul read) to one streamed read.
 
-Grid: (nblk,) — or (K·nblk,) via :func:`solve_level`, which advances all K
-partitions of one SODM level in a single pallas_call per pass with
-warm-start support (Algorithm 1 line 12) and masked padding for
-non-tile-multiple partitions. VMEM per step: B² + 5B floats (B=256 →
-261 KB fp32).
+Memory: only the (B, B) *diagonal* Gram blocks and O(m)-sized vectors
+(alpha, u, u_d, labels) are resident — O(nblk·B²) = O(m·B) bytes instead
+of the full O(m²) Gram on the matrix-free path. VMEM per grid step:
+B² (diag tile) + B² (gram acc) + 2·B·bd (feature slabs) + ~6m/nblk·B
+floats, plus the (1, mp) u_d/label blocks (4·m bytes fp32 — 4 MB at
+m = 10⁶, documented ceiling of the fused layout).
+
+:func:`solve_level` drives the pass loop with warm-start support
+(Algorithm 1 line 12) and masked padding for non-tile-multiple partitions.
 """
 from __future__ import annotations
 
@@ -30,24 +44,35 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import gram as gram_mod
+
 Array = jax.Array
 
 
-def _cd_tile_kernel(q_ref, alpha_ref, u_ref, valid_ref, alpha_out, u_out, *,
-                    c: float, ups: float, theta: float, mscale: float,
-                    n_steps: int):
-    B = q_ref.shape[1]
-    qblk = q_ref[0]                       # (B, B)
+def _greedy_tile_sweep(qblk: Array, alpha: Array, u: Array, valid2: Array,
+                       *, c: float, ups: float, theta: float, mscale: float,
+                       n_steps: int, exit_tol: float) -> tuple[Array, Array]:
+    """Greedy (Gauss-Southwell) CD on one diagonal tile, with early exit.
+
+    qblk (B, B) diagonal Gram block; alpha (2B,) [zeta; beta]; u (B,) cache
+    restricted to the tile's rows (external contribution frozen — Jacobi);
+    valid2 (2B,) marks real coordinates. Runs until ``n_steps`` updates
+    have been applied or the in-tile projected-KKT residual (measured at
+    the start of a step, so the exit lags one cheap update) drops to
+    ``exit_tol``. ``exit_tol = 0.0`` reproduces the fixed-step sweep.
+    """
+    B = qblk.shape[0]
     q_diag = jnp.diagonal(qblk)
     hz = q_diag + mscale * c * ups
     hb = q_diag + mscale * c
     h = jnp.concatenate([hz, hb])
-    # padded coordinates (valid = 0) are frozen at zero: their violation is
-    # masked so greedy never selects them and they never perturb u
-    valid2 = jnp.concatenate([valid_ref[0], valid_ref[0]])
 
-    def step(t, carry):
-        alpha, u = carry
+    def cond(carry):
+        _, _, t, vmax = carry
+        return jnp.logical_and(t < n_steps, vmax > exit_tol)
+
+    def step(carry):
+        alpha, u, t, _ = carry
         zeta, beta = alpha[:B], alpha[B:]
         gz = u + mscale * c * ups * zeta + (theta - 1.0)
         gb = -u + mscale * c * beta + (theta + 1.0)
@@ -65,32 +90,51 @@ def _cd_tile_kernel(q_ref, alpha_ref, u_ref, valid_ref, alpha_out, u_out, *,
         alpha = alpha + delta * sel
         row_oh = sel[:B] - sel[B:]        # +1 for zeta coord, -1 for beta
         u = u + delta * (qblk @ row_oh)
-        return alpha, u
+        return alpha, u, t + 1, jnp.max(viol)
 
-    alpha, u = jax.lax.fori_loop(0, n_steps,
-                                 step, (alpha_ref[0], u_ref[0]))
+    big = jnp.asarray(jnp.finfo(alpha.dtype).max, alpha.dtype)
+    alpha, u, _, _ = jax.lax.while_loop(
+        cond, step, (alpha, u, jnp.int32(0), big))
+    return alpha, u
+
+
+def _cd_tile_kernel(q_ref, alpha_ref, u_ref, valid_ref, alpha_out, u_out, *,
+                    c: float, ups: float, theta: float, mscale: float,
+                    n_steps: int, exit_tol: float):
+    """One (bm=B, bn=B) diagonal tile of the standalone sweep kernel.
+
+    Padded coordinates (valid = 0) are frozen at zero: their violation is
+    masked so greedy never selects them and they never perturb u.
+    """
+    valid2 = jnp.concatenate([valid_ref[0], valid_ref[0]])
+    alpha, u = _greedy_tile_sweep(q_ref[0], alpha_ref[0], u_ref[0], valid2,
+                                  c=c, ups=ups, theta=theta, mscale=mscale,
+                                  n_steps=n_steps, exit_tol=exit_tol)
     alpha_out[0] = alpha
     u_out[0] = u
 
 
 @functools.partial(jax.jit, static_argnames=("c", "ups", "theta", "mscale",
-                                             "n_steps", "interpret"))
+                                             "n_steps", "exit_tol",
+                                             "interpret"))
 def cd_block_sweep(q_blocks: Array, alphas: Array, us: Array, *, c: float,
                    ups: float, theta: float, mscale: float, n_steps: int,
-                   valids: Array | None = None,
+                   valids: Array | None = None, exit_tol: float = 0.0,
                    interpret: bool = False) -> tuple[Array, Array]:
-    """Run n_steps greedy-CD updates inside every diagonal tile.
+    """Run up to n_steps greedy-CD updates inside every diagonal tile.
 
     q_blocks (nblk, B, B), alphas (nblk, 2B), us (nblk, B) ->
     (alphas', us'). ``valids`` (nblk, B) marks real coordinates (1.0) vs
     padding (0.0); padded coordinates are frozen at zero. Defaults to all
-    valid.
+    valid. ``exit_tol > 0`` lets a tile stop its sweep once its in-tile
+    KKT residual drops below it (adaptive steps_per_pass).
     """
     nblk, B, _ = q_blocks.shape
     if valids is None:
         valids = jnp.ones((nblk, B), q_blocks.dtype)
     kernel = functools.partial(_cd_tile_kernel, c=c, ups=ups, theta=theta,
-                               mscale=mscale, n_steps=n_steps)
+                               mscale=mscale, n_steps=n_steps,
+                               exit_tol=exit_tol)
     return pl.pallas_call(
         kernel,
         grid=(nblk,),
@@ -121,24 +165,195 @@ def extract_diag_blocks(Q: Array, block: int) -> Array:
         Q, (b * block, b * block), (block, block)))(idx)
 
 
-def solve_level(q_blocks: Array, matvec, alphas0: Array, *, c: float,
+# ---------------------------------------------------------------------------
+# fused pass: tile sweeps + accumulating Gram matvec, one pallas_call
+# ---------------------------------------------------------------------------
+
+def _fused_dense_kernel(qb_ref, a_ref, u_ref, v_ref, q_ref, a_out, ud_out,
+                        d_ref, *, c: float, ups: float, theta: float,
+                        mscale: float, n_steps: int, exit_tol: float,
+                        B: int):
+    """Fused pass over a materialized signed Q. Grid (K, nblk_i, nblk_j).
+
+    At j = 0 the CD sweep for tile i runs and its Jacobi step
+    d_i = dz_i - db_i is parked in scratch; every j then streams the
+    (B, B) block Q[jB:, iB:] and accumulates Q(j, i) @ d_i into the
+    partition-resident (1, mp) u_d output block.
+    """
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(jnp.logical_and(i == 0, j == 0))
+    def _zero_ud():
+        ud_out[...] = jnp.zeros_like(ud_out)
+
+    @pl.when(j == 0)
+    def _sweep():
+        a_old = a_ref[0, 0]
+        valid2 = jnp.concatenate([v_ref[0, 0], v_ref[0, 0]])
+        a_new, _ = _greedy_tile_sweep(qb_ref[0, 0], a_old, u_ref[0, 0],
+                                      valid2, c=c, ups=ups, theta=theta,
+                                      mscale=mscale, n_steps=n_steps,
+                                      exit_tol=exit_tol)
+        a_out[0, 0] = a_new
+        d = (a_new[:B] - a_old[:B]) - (a_new[B:] - a_old[B:])
+        d_ref[...] = d.astype(jnp.float32)[:, None]
+
+    contrib = jax.lax.dot_general(                 # Q(j, i) @ d_i: (B, 1)
+        q_ref[0].astype(jnp.float32), d_ref[...],
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    sl = pl.ds(j * B, B)
+    ud_out[0, sl] = ud_out[0, sl] + contrib[:, 0].astype(ud_out.dtype)
+
+
+def _fused_mf_kernel(qb_ref, a_ref, u_ref, v_ref, y_ref, xxr_ref, xxc_ref,
+                     xr_ref, xc_ref, a_out, ud_out, acc_ref, d_ref, *,
+                     kind: str, gamma: float, degree: int, coef0: float,
+                     c: float, ups: float, theta: float, mscale: float,
+                     n_steps: int, exit_tol: float, n_d: int, B: int):
+    """Matrix-free fused pass. Grid (K, nblk_i, nblk_j, n_d).
+
+    Identical control flow to the dense variant, but the Gram tile
+    K(j, i) is rebuilt in the acc scratch from feature slabs with the
+    shared skeleton (:mod:`repro.kernels.gram`) across the innermost D
+    sweep. Labels fold in as Q = y yᵀ ⊙ K: the parked step is
+    d_i ⊙ y_i and each row contribution is scaled by y_j, so padded rows
+    (label 0) vanish without masking any tile.
+    """
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    kd = pl.program_id(3)
+
+    @pl.when(jnp.logical_and(i == 0, jnp.logical_and(j == 0, kd == 0)))
+    def _zero_ud():
+        ud_out[...] = jnp.zeros_like(ud_out)
+
+    @pl.when(jnp.logical_and(j == 0, kd == 0))
+    def _sweep():
+        a_old = a_ref[0, 0]
+        valid2 = jnp.concatenate([v_ref[0, 0], v_ref[0, 0]])
+        a_new, _ = _greedy_tile_sweep(qb_ref[0, 0], a_old, u_ref[0, 0],
+                                      valid2, c=c, ups=ups, theta=theta,
+                                      mscale=mscale, n_steps=n_steps,
+                                      exit_tol=exit_tol)
+        a_out[0, 0] = a_new
+        d = (a_new[:B] - a_old[:B]) - (a_new[B:] - a_old[B:])
+        yi = y_ref[0, pl.ds(i * B, B)]
+        d_ref[...] = (yi * d).astype(jnp.float32)[:, None]
+
+    @pl.when(kd == 0)
+    def _zero_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] = gram_mod.accum_tile(kind, acc_ref[...], xr_ref[0],
+                                       xc_ref[0])
+
+    @pl.when(kd == n_d - 1)
+    def _contract():
+        k = gram_mod.finalize_tile(kind, acc_ref[...], xxr_ref[0, 0, :],
+                                   xxc_ref[0, 0, :], gamma=gamma,
+                                   degree=degree, coef0=coef0)
+        contrib = jax.lax.dot_general(             # K(j, i) @ (y_i ⊙ d_i)
+            k, d_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)[:, 0]
+        yj = y_ref[0, pl.ds(j * B, B)]
+        sl = pl.ds(j * B, B)
+        ud_out[0, sl] = ud_out[0, sl] + (yj * contrib).astype(ud_out.dtype)
+
+
+def fused_cd_pass(q_blocks: Array, src, alphas: Array, us: Array,
+                  valids: Array, *, c: float, ups: float, theta: float,
+                  mscale: float, n_steps: int, exit_tol: float,
+                  interpret: bool = False) -> tuple[Array, Array]:
+    """One fused Jacobi pass for a whole level: ONE ``pallas_call``.
+
+    q_blocks (K, nblk, B, B) diagonal blocks; ``src`` a
+    :class:`~repro.kernels.gram.DenseSource` or
+    :class:`~repro.kernels.gram.KernelSource` supplying the off-diagonal
+    mass; alphas (K, nblk, 2B) per-tile [zeta; beta]; us (K, nblk, B);
+    valids (K, nblk, B). Returns (alphas' (K, nblk, 2B),
+    u_d (K, m) = Q (dz - db)) — everything the caller's exact line search
+    needs, with no separate matvec.
+    """
+    K, nblk, B, _ = q_blocks.shape
+    m = nblk * B
+    cd = dict(c=c, ups=ups, theta=theta, mscale=mscale, n_steps=n_steps,
+              exit_tol=exit_tol)
+    out_shape = [
+        jax.ShapeDtypeStruct(alphas.shape, alphas.dtype),
+        jax.ShapeDtypeStruct((K, m), us.dtype),
+    ]
+    cd_specs = [
+        pl.BlockSpec((1, 1, B, B), lambda k, i, j, *d: (k, i, 0, 0)),  # qb
+        pl.BlockSpec((1, 1, 2 * B), lambda k, i, j, *d: (k, i, 0)),    # a
+        pl.BlockSpec((1, 1, B), lambda k, i, j, *d: (k, i, 0)),        # u
+        pl.BlockSpec((1, 1, B), lambda k, i, j, *d: (k, i, 0)),        # v
+    ]
+    out_specs = [
+        pl.BlockSpec((1, 1, 2 * B), lambda k, i, j, *d: (k, i, 0)),    # a'
+        pl.BlockSpec((1, m), lambda k, i, j, *d: (k, 0)),              # u_d
+    ]
+    if isinstance(src, gram_mod.DenseSource):
+        kernel = functools.partial(_fused_dense_kernel, B=B, **cd)
+        return pl.pallas_call(
+            kernel,
+            grid=(K, nblk, nblk),
+            in_specs=cd_specs + [
+                pl.BlockSpec((1, B, B), lambda k, i, j: (k, j, i)),    # Q
+            ],
+            out_specs=out_specs,
+            out_shape=out_shape,
+            scratch_shapes=[gram_mod._scratch((B, 1))],
+            interpret=interpret,
+        )(q_blocks, alphas, us, valids, src.q)
+
+    bd = src.bd
+    n_d = src.x.shape[-1] // bd
+    xx = gram_mod.row_norms(src.x)[:, None, :].astype(src.x.dtype)  # (K,1,m)
+    kernel = functools.partial(_fused_mf_kernel, kind=src.kind,
+                               gamma=src.gamma, degree=src.degree,
+                               coef0=src.coef0, n_d=n_d, B=B, **cd)
+    return pl.pallas_call(
+        kernel,
+        grid=(K, nblk, nblk, n_d),
+        in_specs=cd_specs + [
+            pl.BlockSpec((1, m), lambda k, i, j, d: (k, 0)),           # y
+            pl.BlockSpec((1, 1, B), lambda k, i, j, d: (k, 0, j)),     # xx_j
+            pl.BlockSpec((1, 1, B), lambda k, i, j, d: (k, 0, i)),     # xx_i
+            pl.BlockSpec((1, B, bd), lambda k, i, j, d: (k, j, d)),    # x_j
+            pl.BlockSpec((1, B, bd), lambda k, i, j, d: (k, i, d)),    # x_i
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[gram_mod._scratch((B, B)), gram_mod._scratch((B, 1))],
+        interpret=interpret,
+    )(q_blocks, alphas, us, valids, src.y, xx, xx, src.x, src.x)
+
+
+# ---------------------------------------------------------------------------
+# level solve: fused pass loop + exact line search + exact KKT stop
+# ---------------------------------------------------------------------------
+
+def solve_level(q_blocks: Array, src, alphas0: Array, *, c: float,
                 ups: float, theta: float, mscale: float,
                 steps_per_pass: int | None = None, n_passes: int = 30,
                 tol: float = 1e-5, valid: Array | None = None,
-                us0: Array | None = None,
+                us0: Array | None = None, adaptive: bool = True,
+                fused: bool | None = None,
                 interpret: bool = False) -> tuple[Array, Array, Array]:
     """Block-CD solve of K same-size partitions, one ``pallas_call`` per pass.
 
     This is SODM's per-level engine: all K local ODM duals of one level are
-    advanced together — the tile kernel runs over a flat (K * nblk,) grid so
-    a whole level is a single kernel launch per pass, and the u refresh is
-    one batched matmul (or on-the-fly Gram matvec) supplied by ``matvec``.
+    advanced together by :func:`fused_cd_pass` — tile sweeps AND the
+    cross-tile Gram matvec in a single kernel launch per pass, for any
+    supported gram source.
 
     Args:
       q_blocks: (K, nblk, B, B) diagonal Gram blocks of each partition.
-      matvec:   callable (K, m) -> (K, m) computing per-partition Q_k @ g_k.
-                Supplied by the caller so the off-diagonal mass can live in a
-                materialized Q or be generated on the fly (rbf_gram kernel).
+      src:      gram source for the off-diagonal mass —
+                :class:`~repro.kernels.gram.DenseSource` (materialized Q)
+                or :class:`~repro.kernels.gram.KernelSource` (on-the-fly
+                tiles, O(m·B) memory).
       alphas0:  (K, 2m) warm starts — Algorithm 1 line 12 passes the merged
                 child solutions here; zeros give a cold start.
       valid:    (m,) mask of real vs padded coordinates, shared by all
@@ -149,23 +364,46 @@ def solve_level(q_blocks: Array, matvec, alphas0: Array, *, c: float,
                 linear in alpha, so callers that already paid the matvec
                 (e.g. for a warm-start rescale) pass the scaled cache here
                 and skip the init matvec.
+      adaptive: early-exit each tile's greedy sweep once its in-tile KKT
+                residual drops below 0.01·tol (never changes the
+                convergence criterion — the outer stop is always the
+                exact full-problem KKT residual).
+      fused:    run each pass as ONE :func:`fused_cd_pass` launch (sweeps
+                + in-kernel Gram matvec). Default (None) picks fused when
+                compiled and the mathematically identical two-launch
+                layout (sweep kernel + ``src.matvec``) under interpret
+                mode: the interpreter unrolls the grid into the trace, so
+                the fused nblk² grid would bloat CPU compile time
+                quadratically while the win it buys (one kernel launch,
+                halved HBM round-trips) only exists on real hardware.
 
     The outer while_loop is shared across partitions (Jacobi): it stops when
-    the *worst* partition's projected-KKT residual drops below tol. The KKT
-    of the warm start is evaluated before the first pass so an
-    already-optimal init returns 0 passes (Algorithm 1 line 5's early-stop
-    convergence check reads this).
+    the *worst* partition's projected-KKT residual drops below tol. Each
+    pass is safeguarded by an exact line search along the joint Jacobi step
+    (f(alpha + t·d) is quadratic in t and u moves linearly, so the optimal
+    damping is closed-form and reuses the fused pass's matvec): t = 1 when
+    tiles don't conflict; t < 1 tames off-diagonal mass that would
+    otherwise make simultaneous tile updates diverge (weakly regularized /
+    Q-dominant duals). The KKT of the warm start is evaluated before the
+    first pass so an already-optimal init returns 0 passes (Algorithm 1
+    line 5's early-stop convergence check reads this).
 
     Returns (alphas (K, 2m), kkts (K,), passes ()).
     """
     K, nblk, B, _ = q_blocks.shape
     m = nblk * B
-    qb = q_blocks.reshape(K * nblk, B, B)
     n_steps = 2 * B if steps_per_pass is None else steps_per_pass
+    if fused is None:
+        fused = not interpret
+    # the in-tile exit is two decades tighter than the outer stop so an
+    # exited tile is converged *relative to* the full-problem check — the
+    # adaptive path then never pays extra outer passes for the steps the
+    # fixed sweep would have spent polishing an already-converged tile
+    exit_tol = 0.01 * tol if adaptive else 0.0
     if valid is None:
         valid = jnp.ones((m,), q_blocks.dtype)
     valid = valid.astype(q_blocks.dtype)
-    valids = jnp.tile(valid.reshape(nblk, B), (K, 1))      # (K*nblk, B)
+    valids = jnp.broadcast_to(valid.reshape(1, nblk, B), (K, nblk, B))
     valid2 = jnp.concatenate([valid, valid])[None, :]      # (1, 2m)
 
     def kkt(alphas, us):
@@ -180,23 +418,33 @@ def solve_level(q_blocks: Array, matvec, alphas0: Array, *, c: float,
         alphas, us, _, it = carry
         zetas, betas = alphas[:, :m], alphas[:, m:]
         a_t = jnp.concatenate([zetas.reshape(K, nblk, B),
-                               betas.reshape(K, nblk, B)],
-                              axis=2).reshape(K * nblk, 2 * B)
-        a_t, _ = cd_block_sweep(qb, a_t, us.reshape(K * nblk, B), c=c,
-                                ups=ups, theta=theta, mscale=mscale,
-                                n_steps=n_steps, valids=valids,
-                                interpret=interpret)
-        a_t = a_t.reshape(K, nblk, 2 * B)
-        z_new = a_t[:, :, :B].reshape(K, m)
-        b_new = a_t[:, :, B:].reshape(K, m)
-        # exact line search along each partition's joint Jacobi step:
-        # f(alpha + t·d) is quadratic in t and u moves linearly, so the
-        # optimal damping is closed-form and reuses this pass's one
-        # matvec. t = 1 when tiles don't conflict; t < 1 tames
-        # off-diagonal mass that would otherwise make simultaneous tile
-        # updates diverge (weakly regularized / Q-dominant duals).
-        dz, db = z_new - zetas, b_new - betas
-        u_d = matvec(dz - db)
+                               betas.reshape(K, nblk, B)], axis=2)
+        if fused:
+            a_t, u_d = fused_cd_pass(q_blocks, src, a_t,
+                                     us.reshape(K, nblk, B), valids, c=c,
+                                     ups=ups, theta=theta, mscale=mscale,
+                                     n_steps=n_steps, exit_tol=exit_tol,
+                                     interpret=interpret)
+            z_new = a_t[:, :, :B].reshape(K, m)
+            b_new = a_t[:, :, B:].reshape(K, m)
+            dz, db = z_new - zetas, b_new - betas
+        else:
+            # two-launch layout: same sweep helper, same math — the Gram
+            # matvec just rides a second launch (src.matvec) instead of
+            # accumulating inside the sweep kernel
+            a2, _ = cd_block_sweep(
+                q_blocks.reshape(K * nblk, B, B),
+                a_t.reshape(K * nblk, 2 * B),
+                us.reshape(K * nblk, B), c=c, ups=ups, theta=theta,
+                mscale=mscale, n_steps=n_steps, exit_tol=exit_tol,
+                valids=valids.reshape(K * nblk, B), interpret=interpret)
+            a2 = a2.reshape(K, nblk, 2 * B)
+            z_new = a2[:, :, :B].reshape(K, m)
+            b_new = a2[:, :, B:].reshape(K, m)
+            dz, db = z_new - zetas, b_new - betas
+            u_d = src.matvec(dz - db)
+        # exact line search along each partition's joint Jacobi step; the
+        # matvec u_d = Q (dz - db) it needs came out of the fused pass
         gz = us + mscale * c * ups * zetas + (theta - 1.0)
         gb = -us + mscale * c * betas + (theta + 1.0)
         gdot = jnp.sum(gz * dz + gb * db, axis=1)
@@ -216,7 +464,7 @@ def solve_level(q_blocks: Array, matvec, alphas0: Array, *, c: float,
 
     if us0 is None:
         zetas0, betas0 = alphas0[:, :m], alphas0[:, m:]
-        us0 = matvec(zetas0 - betas0)
+        us0 = src.matvec(zetas0 - betas0)
     init = (alphas0, us0, kkt(alphas0, us0), jnp.int32(0))
     alphas, _, r, it = jax.lax.while_loop(cond, body, init)
     return alphas, r, it
@@ -225,23 +473,24 @@ def solve_level(q_blocks: Array, matvec, alphas0: Array, *, c: float,
 def solve(Q: Array, *, c: float, ups: float, theta: float, mscale: float,
           block: int = 256, steps_per_pass: int | None = None,
           n_passes: int = 30, tol: float = 1e-5, alpha0: Array | None = None,
-          valid: Array | None = None,
+          valid: Array | None = None, adaptive: bool = True,
+          fused: bool | None = None,
           interpret: bool = False) -> tuple[Array, Array, Array]:
-    """Full block-CD solve driven by the Pallas tile kernel.
+    """Full block-CD solve driven by the fused Pallas pass kernel.
 
-    Outer loop (lax.while_loop): refresh u = Q gamma (MXU matmul), run the
-    tile kernel on all diagonal blocks, check the global projected-KKT
-    residual. ``alpha0`` is the warm start (defaults to zeros); a
-    warm start already within tol returns 0 passes. ``valid`` marks real
-    vs padded coordinates (see :func:`solve_level`). Returns
-    (alpha, kkt, passes).
+    Outer loop (lax.while_loop): one fused pass (tile sweeps + Gram
+    matvec), exact line search, global projected-KKT check. ``alpha0`` is
+    the warm start (defaults to zeros); a warm start already within tol
+    returns 0 passes. ``valid`` marks real vs padded coordinates (see
+    :func:`solve_level`). Returns (alpha, kkt, passes).
     """
     M = Q.shape[0]
     assert M % block == 0, (M, block)
     qb = extract_diag_blocks(Q, block)[None]               # (1, nblk, B, B)
     a0 = jnp.zeros(2 * M, Q.dtype) if alpha0 is None else alpha0
     alphas, r, it = solve_level(
-        qb, lambda g: g @ Q, a0[None], c=c, ups=ups, theta=theta,
-        mscale=mscale, steps_per_pass=steps_per_pass, n_passes=n_passes,
-        tol=tol, valid=valid, interpret=interpret)
+        qb, gram_mod.DenseSource(Q[None]), a0[None], c=c, ups=ups,
+        theta=theta, mscale=mscale, steps_per_pass=steps_per_pass,
+        n_passes=n_passes, tol=tol, valid=valid, adaptive=adaptive,
+        fused=fused, interpret=interpret)
     return alphas[0], r[0], it

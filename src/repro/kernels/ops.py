@@ -17,8 +17,8 @@ import jax.numpy as jnp
 
 from repro.kernels import dual_cd_block as _cd
 from repro.kernels import flash_attn as _fa
+from repro.kernels import gram as _gram
 from repro.kernels import odm_grad as _og
-from repro.kernels import rbf_gram as _rg
 from repro.kernels import ref
 
 Array = jax.Array
@@ -38,13 +38,18 @@ def _pad_to(a: Array, axis: int, mult: int, value=0.0) -> tuple[Array, int]:
 
 
 # ---------------------------------------------------------------------------
-# rbf gram
+# gram (all KernelSpec families; rbf_* kept as pinned-kernel conveniences)
 # ---------------------------------------------------------------------------
 
-def rbf_gram(x: Array, z: Array, gamma: float, *, yx: Array | None = None,
-             yz: Array | None = None, bm: int = 256, bn: int = 256,
-             bd: int = 512) -> Array:
-    """(Signed) RBF Gram for arbitrary shapes; pads to tile multiples."""
+def gram(x: Array, z: Array, spec, *, yx: Array | None = None,
+         yz: Array | None = None, bm: int = 256, bn: int = 256,
+         bd: int = 512) -> Array:
+    """(Signed) Gram for arbitrary shapes and any ``KernelSpec`` family.
+
+    ``spec`` is KernelSpec-like (name/gamma/degree/coef0). Pads to tile
+    multiples and unpads the result; zero feature pads shift neither the
+    L2 cross term nor the L1 distance, so padding is transparent.
+    """
     M, D = x.shape
     N = z.shape[0]
     bm = min(bm, max(8, M))
@@ -59,9 +64,28 @@ def rbf_gram(x: Array, z: Array, gamma: float, *, yx: Array | None = None,
     if signed:
         yxp, _ = _pad_to(yx, 0, bm)
         yzp, _ = _pad_to(yz if yz is not None else yx, 0, bn)
-    out = _rg.rbf_gram(xp, zp, yxp, yzp, gamma=gamma, signed=signed,
-                       bm=bm, bn=bn, bd=bd, interpret=_INTERPRET)
+    out = _gram.gram(xp, zp, yxp, yzp, kind=spec.name, gamma=spec.gamma,
+                     degree=spec.degree, coef0=spec.coef0, signed=signed,
+                     bm=bm, bn=bn, bd=bd, interpret=_INTERPRET)
     return out[:M, :N]
+
+
+def rbf_gram(x: Array, z: Array, gamma: float, *, yx: Array | None = None,
+             yz: Array | None = None, bm: int = 256, bn: int = 256,
+             bd: int = 512) -> Array:
+    """(Signed) RBF Gram for arbitrary shapes; pads to tile multiples."""
+    return gram(x, z, _RbfSpec(gamma), yx=yx, yz=yz, bm=bm, bn=bn, bd=bd)
+
+
+class _RbfSpec:
+    """Minimal KernelSpec stand-in so kernels/ never imports repro.core."""
+
+    name = "rbf"
+    degree = 3
+    coef0 = 1.0
+
+    def __init__(self, gamma: float):
+        self.gamma = gamma
 
 
 # ---------------------------------------------------------------------------
@@ -71,13 +95,17 @@ def rbf_gram(x: Array, z: Array, gamma: float, *, yx: Array | None = None,
 def dual_cd_solve(Q: Array, *, c: float, ups: float, theta: float,
                   mscale: float, block: int = 256, n_passes: int = 50,
                   tol: float = 1e-5, steps_per_pass: int | None = None,
-                  alpha0: Array | None = None) -> tuple[Array, Array, Array]:
-    """Solve the ODM dual with the Pallas tile kernel. Pads M to the block.
+                  alpha0: Array | None = None,
+                  adaptive: bool = True) -> tuple[Array, Array, Array]:
+    """Solve the ODM dual with the fused Pallas pass kernel. Pads M to the
+    block.
 
     ``alpha0`` (2M,) is the warm start (SODM Algorithm 1 line 12); zeros
     when omitted. Padded coordinates are masked inside the tile kernel
     (frozen at zero, excluded from the KKT residual), so padding neither
     moves spurious coordinates nor delays the 0-pass warm-start exit.
+    ``adaptive`` enables the in-tile early exit (see
+    :func:`repro.kernels.dual_cd_block.solve_level`).
     """
     M = Q.shape[0]
     block = min(block, M)
@@ -92,15 +120,14 @@ def dual_cd_solve(Q: Array, *, c: float, ups: float, theta: float,
     alpha, kkt, passes = _cd.solve(
         Qp, c=c, ups=ups, theta=theta, mscale=mscale, block=block,
         n_passes=n_passes, tol=tol, steps_per_pass=steps_per_pass,
-        alpha0=a0, valid=valid, interpret=_INTERPRET)
+        alpha0=a0, valid=valid, adaptive=adaptive, interpret=_INTERPRET)
     zeta, beta = alpha[:Mp], alpha[Mp:]
     return jnp.concatenate([zeta[:M], beta[:M]]), kkt, passes
 
 
-def rbf_gram_matvec(x: Array, g: Array, *, gamma: float,
-                    y: Array | None = None, bm: int = 256, bn: int = 256,
-                    bd: int = 512) -> Array:
-    """u[k] = Q_k @ g[k] with Q the (signed) RBF Gram, never materialized.
+def gram_matvec(x: Array, g: Array, spec, *, y: Array | None = None,
+                bm: int = 256, bn: int = 256, bd: int = 512) -> Array:
+    """u[k] = Q_k @ g[k] for any ``KernelSpec`` family, never materialized.
 
     x (K, m, d) batched partitions, g (K, m); y (K, m) labels make it the
     signed product Q = y yᵀ ⊙ K via u = y ⊙ (K @ (y ⊙ g)). Pads m and d to
@@ -116,9 +143,17 @@ def rbf_gram_matvec(x: Array, g: Array, *, gamma: float,
     xp, _ = _pad_to(x, 1, max(bm, bn))
     xp, _ = _pad_to(xp, 2, bd)
     gp, _ = _pad_to(gs, 1, max(bm, bn))
-    u = _rg.rbf_gram_matvec(xp, xp, gp, gamma=gamma, bm=bm, bn=bn, bd=bd,
-                            interpret=_INTERPRET)[:, :M]
+    u = _gram.gram_matvec(xp, xp, gp, kind=spec.name, gamma=spec.gamma,
+                          degree=spec.degree, coef0=spec.coef0, bm=bm,
+                          bn=bn, bd=bd, interpret=_INTERPRET)[:, :M]
     return u if y is None else y * u
+
+
+def rbf_gram_matvec(x: Array, g: Array, *, gamma: float,
+                    y: Array | None = None, bm: int = 256, bn: int = 256,
+                    bd: int = 512) -> Array:
+    """RBF-pinned convenience over :func:`gram_matvec`."""
+    return gram_matvec(x, g, _RbfSpec(gamma), y=y, bm=bm, bn=bn, bd=bd)
 
 
 # ---------------------------------------------------------------------------
@@ -180,6 +215,33 @@ def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
                               scale=scale, bq=bq, bk=bk,
                               interpret=_INTERPRET)
     return out[:, :, :T, :]
+
+
+# ---------------------------------------------------------------------------
+# introspection
+# ---------------------------------------------------------------------------
+
+def count_pallas_calls(fn) -> int:
+    """Trace ``fn()`` (zero-arg, no execution) and count ``pallas_call``s.
+
+    Used by the kernels benchmark and the engine tests to pin per-pass
+    kernel-launch counts (e.g. the fused CD pass must be exactly one).
+    Jitted constituents only reach ``pallas_call`` while tracing, so clear
+    their caches first if they may have been traced with the same shapes.
+    """
+    from jax.experimental import pallas as pl
+    orig, n = pl.pallas_call, [0]
+
+    def counting(*args, **kw):
+        n[0] += 1
+        return orig(*args, **kw)
+
+    pl.pallas_call = counting
+    try:
+        jax.eval_shape(fn)
+    finally:
+        pl.pallas_call = orig
+    return n[0]
 
 
 # re-export oracles for convenience

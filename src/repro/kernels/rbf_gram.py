@@ -1,198 +1,30 @@
-"""Pallas TPU kernel: tiled (signed) RBF Gram matrix.
-
-The nonlinear-kernel hot spot of SODM: every local ODM solve needs
-Q_ij = y_i y_j exp(-gamma ||x_i - x_j||^2) for its partition. The expanded
-form puts the -2 x zᵀ cross term on the MXU; row norms are precomputed on
-host (O(Md), negligible) and streamed as (1, bm)-shaped scalars-per-row.
-
-Tiling: grid (M/bm, N/bn, D/bd). The feature dimension D is the innermost
-(fastest-varying) grid axis so the fp32 accumulator scratch lives across
-the D sweep and the (bm, bn) output tile is written once, on the last D
-step — classic matmul accumulation pattern. VMEM per step:
-bm*bd + bn*bd (operands) + bm*bn (acc) floats; defaults (256, 256, 512)
-=> 0.75 MB operands + 0.25 MB acc in fp32, far under the ~16 MB/core VMEM
-budget, leaving room for double buffering.
-
-MXU alignment: bm, bn, bd all multiples of 128 (the MXU systolic dim) and
-the exp() runs on the VPU over the finished tile.
+"""Compatibility shim: the tiled RBF Gram kernels now live in
+:mod:`repro.kernels.gram`, which lowers the full ODM kernel family
+(rbf / laplacian / poly / linear) through one shared accumulation
+skeleton. These wrappers pin ``kind="rbf"`` and keep the original
+signatures for existing callers and kernel tests.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
+
+from repro.kernels import gram as _gram
 
 Array = jax.Array
 
 
-def _rbf_gram_kernel(xx_ref, zz_ref, yx_ref, yz_ref, x_ref, z_ref,
-                     out_ref, acc_ref, *, gamma: float, signed: bool,
-                     n_d_steps: int):
-    """One (bm, bn) tile, accumulating the cross term over D blocks.
-
-    xx/zz: (1, bm)/(1, bn) squared row norms; yx/yz: labels (only read when
-    signed). x (bm, bd), z (bn, bd). acc: (bm, bn) fp32 scratch.
-    """
-    kd = pl.program_id(2)
-
-    @pl.when(kd == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    x = x_ref[...]
-    z = z_ref[...]
-    acc_ref[...] += jax.lax.dot_general(
-        x, z, (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32)
-
-    @pl.when(kd == n_d_steps - 1)
-    def _finalize():
-        xx = xx_ref[0, :]                      # (bm,)
-        zz = zz_ref[0, :]                      # (bn,)
-        d2 = xx[:, None] + zz[None, :] - 2.0 * acc_ref[...]
-        k = jnp.exp(-gamma * jnp.maximum(d2, 0.0))
-        if signed:
-            k = (yx_ref[0, :][:, None] * yz_ref[0, :][None, :]) * k
-        out_ref[...] = k.astype(out_ref.dtype)
-
-
-@functools.partial(jax.jit, static_argnames=("gamma", "signed", "bm", "bn",
-                                             "bd", "interpret"))
 def rbf_gram(x: Array, z: Array, yx: Array | None = None,
              yz: Array | None = None, *, gamma: float = 1.0,
              signed: bool = False, bm: int = 256, bn: int = 256,
              bd: int = 512, interpret: bool = False) -> Array:
-    """K (or Q if signed) of shape (M, N). Shapes must tile evenly; the
-    ops.py wrapper pads and unpads arbitrary shapes."""
-    M, D = x.shape
-    N = z.shape[0]
-    assert M % bm == 0 and N % bn == 0 and D % bd == 0, (M, N, D, bm, bn, bd)
-    if yx is None:
-        yx = jnp.ones((M,), x.dtype)
-    if yz is None:
-        yz = jnp.ones((N,), x.dtype)
-    n_d_steps = D // bd
-
-    grid = (M // bm, N // bn, n_d_steps)
-    xx = jnp.sum(x.astype(jnp.float32) ** 2, axis=-1)[None, :]   # (1, M)
-    zz = jnp.sum(z.astype(jnp.float32) ** 2, axis=-1)[None, :]   # (1, N)
-
-    kernel = functools.partial(_rbf_gram_kernel, gamma=gamma, signed=signed,
-                               n_d_steps=n_d_steps)
-    return pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, bm), lambda i, j, k: (0, i)),       # xx
-            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),       # zz
-            pl.BlockSpec((1, bm), lambda i, j, k: (0, i)),       # yx
-            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),       # yz
-            pl.BlockSpec((bm, bd), lambda i, j, k: (i, k)),      # x
-            pl.BlockSpec((bn, bd), lambda i, j, k: (j, k)),      # z
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
-        scratch_shapes=[_acc_scratch(bm, bn)],
-        interpret=interpret,
-    )(xx, zz, yx[None, :], yz[None, :], x, z)
+    """K (or Q if signed) of shape (M, N). See :func:`repro.kernels.gram.gram`."""
+    return _gram.gram(x, z, yx, yz, kind="rbf", gamma=gamma, signed=signed,
+                      bm=bm, bn=bn, bd=bd, interpret=interpret)
 
 
-def _rbf_matvec_kernel(xx_ref, zz_ref, g_ref, x_ref, z_ref, out_ref,
-                       acc_ref, u_ref, *, gamma: float, n_j: int, n_d: int):
-    """One (bm,) slice of u = K(x, z) @ g, accumulated over (j, d) tiles.
-
-    Grid (K, M/bm, N/bn, D/bd). The (bm, bn) Gram tile is formed in the
-    acc scratch across the D sweep exactly like _rbf_gram_kernel, then
-    immediately contracted against the matching g tile into the (bm, 1)
-    u scratch — the tile never leaves VMEM, so memory stays O(m·B) however
-    large the partition's full Gram would be.
-    """
-    kj = pl.program_id(2)
-    kd = pl.program_id(3)
-
-    @pl.when(jnp.logical_and(kj == 0, kd == 0))
-    def _init_u():
-        u_ref[...] = jnp.zeros_like(u_ref)
-
-    @pl.when(kd == 0)
-    def _init_acc():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    acc_ref[...] += jax.lax.dot_general(
-        x_ref[0], z_ref[0], (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32)
-
-    @pl.when(kd == n_d - 1)
-    def _contract():
-        xx = xx_ref[0, 0, :]                   # (bm,)
-        zz = zz_ref[0, 0, :]                   # (bn,)
-        d2 = xx[:, None] + zz[None, :] - 2.0 * acc_ref[...]
-        k = jnp.exp(-gamma * jnp.maximum(d2, 0.0))
-        g = g_ref[0, 0, :]                     # (bn,)
-        u_ref[...] += jax.lax.dot_general(     # (bm, bn) @ (bn, 1)
-            k, g[:, None], (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
-
-    @pl.when(jnp.logical_and(kj == n_j - 1, kd == n_d - 1))
-    def _finalize():
-        out_ref[...] = u_ref[...].astype(out_ref.dtype)[None]
-
-
-@functools.partial(jax.jit, static_argnames=("gamma", "bm", "bn", "bd",
-                                             "interpret"))
 def rbf_gram_matvec(x: Array, z: Array, g: Array, *, gamma: float = 1.0,
                     bm: int = 256, bn: int = 256, bd: int = 512,
                     interpret: bool = False) -> Array:
-    """u[k] = K(x[k], z[k]) @ g[k] without materializing any (M, N) Gram.
-
-    Batched over a leading partition axis so one SODM level's u refresh is
-    a single pallas_call: x (K, M, D), z (K, N, D), g (K, N) -> u (K, M).
-    Shapes must tile evenly; the ops.py wrapper pads arbitrary shapes. For
-    the *signed* product Q @ g = y ⊙ (K @ (y ⊙ g)) fold the labels into g
-    and the result (the ops wrapper does).
-    """
-    K, M, D = x.shape
-    N = z.shape[1]
-    assert M % bm == 0 and N % bn == 0 and D % bd == 0, (M, N, D, bm, bn, bd)
-    n_j, n_d = N // bn, D // bd
-    grid = (K, M // bm, n_j, n_d)
-    xx = jnp.sum(x.astype(jnp.float32) ** 2, axis=-1)[:, None, :]  # (K, 1, M)
-    zz = jnp.sum(z.astype(jnp.float32) ** 2, axis=-1)[:, None, :]  # (K, 1, N)
-
-    kernel = functools.partial(_rbf_matvec_kernel, gamma=gamma, n_j=n_j,
-                               n_d=n_d)
-    out = pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, bm), lambda k, i, j, d: (k, 0, i)),   # xx
-            pl.BlockSpec((1, 1, bn), lambda k, i, j, d: (k, 0, j)),   # zz
-            pl.BlockSpec((1, 1, bn), lambda k, i, j, d: (k, 0, j)),   # g
-            pl.BlockSpec((1, bm, bd), lambda k, i, j, d: (k, i, d)),  # x
-            pl.BlockSpec((1, bn, bd), lambda k, i, j, d: (k, j, d)),  # z
-        ],
-        out_specs=pl.BlockSpec((1, bm, 1), lambda k, i, j, d: (k, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((K, M, 1), x.dtype),
-        scratch_shapes=[_acc_scratch(bm, bn), _u_scratch(bm)],
-        interpret=interpret,
-    )(xx, zz, g[:, None, :], x, z)
-    return out[:, :, 0]
-
-
-def _u_scratch(bm: int):
-    try:
-        from jax.experimental.pallas import tpu as pltpu
-        return pltpu.VMEM((bm, 1), jnp.float32)
-    except Exception:                          # pragma: no cover
-        return pl.VMEM((bm, 1), jnp.float32)
-
-
-def _acc_scratch(bm: int, bn: int):
-    from jax.experimental import pallas as pl  # local to keep import cheap
-    try:
-        from jax.experimental.pallas import tpu as pltpu
-        return pltpu.VMEM((bm, bn), jnp.float32)
-    except Exception:                          # pragma: no cover
-        return pl.VMEM((bm, bn), jnp.float32)
+    """u[k] = K(x[k], z[k]) @ g[k]. See :func:`repro.kernels.gram.gram_matvec`."""
+    return _gram.gram_matvec(x, z, g, kind="rbf", gamma=gamma, bm=bm, bn=bn,
+                             bd=bd, interpret=interpret)

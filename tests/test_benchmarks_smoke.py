@@ -1,0 +1,66 @@
+"""Benchmark-script rot guard (ISSUE 2 satellite).
+
+The paper-table and kernel-micro bench scripts are not exercised by the
+unit suite, so API refactors could silently break them. This smoke tier
+(a) imports every module registered in ``benchmarks.run`` (catches
+syntax/import rot) and (b) *executes* the two scripts named in the issue —
+``kernels_bench`` and ``table2_rbf`` — through their quick paths, so every
+jit/pallas entry point they touch actually compiles. Runs under
+``-m "not slow"``; the ``bench_smoke`` marker (pytest.ini) lets callers
+deselect it separately.
+"""
+import importlib
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+pytestmark = pytest.mark.bench_smoke
+
+BENCH_MODULES = ["run", "common", "kernels_bench", "table2_rbf",
+                 "table3_linear", "table4_svm", "fig2_speedup",
+                 "fig4_gradient", "roofline_report"]
+
+
+@pytest.mark.parametrize("name", BENCH_MODULES)
+def test_bench_module_imports(name):
+    importlib.import_module(f"benchmarks.{name}")
+
+
+def test_run_registry_covers_all_tables():
+    from benchmarks import run
+    assert set(run.ALL) == {"table2", "table3", "table4", "fig2", "fig4",
+                            "kernels", "roofline"}
+
+
+def test_kernels_bench_quick_executes():
+    """Compile-and-run the full kernels_bench script path at toy sizes.
+
+    Also pins the fused-pass acceptance numbers: exactly one pallas_call
+    per pass, one matvec launch saved vs the PR 1 layout.
+    """
+    from benchmarks import kernels_bench
+    out = []
+    kernels_bench.run(out, quick=True)
+    assert any(line.startswith("kernels,sodm_level_pallas") for line in out)
+    for name in ("linear", "rbf", "laplacian", "poly"):
+        assert any(f"gram_matvec_{name}" in line for line in out), name
+    fused = [line for line in out if "fused_pass_op_count" in line]
+    assert len(fused) == 1
+    assert "pallas_calls_per_pass_fused=1" in fused[0]
+    assert "matvec_launches_saved=1" in fused[0]
+
+
+def test_table2_rbf_quick_executes():
+    """One tiny data set through the full table-2 harness (all methods)."""
+    from benchmarks import table2_rbf
+    out = []
+    # one data set at ~1/10 scale: the ~15s floor is the jit compiles of
+    # the five methods, not the solve — small enough for the fast tier
+    table2_rbf.run(out, datasets=["svmguide1"], scale_factor=0.1)
+    methods = {line.split(",")[2] for line in out
+               if line.startswith("table2,svmguide1")}
+    assert {"SODM", "SODM-blk", "Ca-ODM", "DiP-ODM", "DC-ODM"} <= methods
+    assert any(line.startswith("table2,summary") for line in out)

@@ -1,0 +1,183 @@
+"""Engine-parity property battery (ISSUE 2 satellite).
+
+For random small problems across all four ``KernelSpec`` families and all
+solver engines (scalar / block / pallas-dense / pallas-matrix-free):
+
+* final duals agree within tolerance (the QP is strongly convex — the
+  m·c·I regularizer makes the optimum unique, so every correct engine
+  must land on it);
+* dual objective values are monotone non-increasing across passes for
+  every engine's pass/sweep stepper (the line-search safeguard makes each
+  Jacobi pass a descent step; Gauss-Seidel sweeps descend coordinatewise);
+* the adaptive in-tile early exit never lets the solver report
+  convergence while the *true* full-problem KKT residual exceeds tol, and
+  never costs extra passes vs the fixed-step sweep.
+
+Runs in the fast tier and is seed-stable: with hypothesis installed the
+seeds are drawn (derandomized); without it the same tests run over a
+fixed seed sweep — identical assertions either way.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import dual_cd, engines, kernel_fns as kf, odm
+from repro.kernels import ops
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                        # container without hypothesis
+    HAVE_HYPOTHESIS = False
+
+N_SEEDS = 3
+PARAMS = odm.ODMParams(lam=1.0, theta=0.1, ups=0.5)
+SPECS = {
+    "linear": kf.make_spec("linear"),
+    "rbf": kf.make_spec("rbf", gamma=0.5),
+    "laplacian": kf.make_spec("laplacian", gamma=0.4),
+    "poly": kf.make_spec("poly", gamma=0.3, degree=2, coef0=1.0),
+}
+K_PARTS, M_PART, DIM, BLOCK = 2, 24, 5, 16
+
+
+def seeded(fn):
+    """Property decorator: drawn seeds under hypothesis, fixed sweep without.
+
+    Both paths call ``fn(..., seed=<int>)`` and are deterministic
+    (derandomize=True), so failures reproduce exactly in CI.
+    """
+    if HAVE_HYPOTHESIS:
+        return settings(deadline=None, max_examples=N_SEEDS,
+                        derandomize=True)(
+            given(seed=st.integers(0, 2 ** 16))(fn))
+    return pytest.mark.parametrize("seed", range(N_SEEDS))(fn)
+
+
+def _level_problem(seed):
+    """One SODM level: K partitions of m points each, labels balanced."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    xs = jax.random.normal(k1, (K_PARTS, M_PART, DIM))
+    ys = jnp.sign(jax.random.normal(k2, (K_PARTS, M_PART)) + 1e-6)
+    xs = xs + ys[:, :, None]           # separable-ish: both classes active
+    return xs, ys, jnp.zeros((K_PARTS, 2 * M_PART))
+
+
+def _engine_solvers():
+    return {
+        "scalar": lambda xs, ys, a0, spec: engines.solve_level_scalar(
+            xs, ys, a0, spec=spec, params=PARAMS, tol=1e-7, max_sweeps=800),
+        "block": lambda xs, ys, a0, spec: engines.solve_level_block(
+            xs, ys, a0, spec=spec, params=PARAMS, tol=1e-7, max_sweeps=800,
+            block=BLOCK),
+        "pallas": lambda xs, ys, a0, spec: engines.solve_level_pallas(
+            xs, ys, a0, spec=spec, params=PARAMS, tol=1e-7, max_sweeps=800,
+            block=BLOCK, gram_threshold=10 ** 9),
+        "pallas-mfree": lambda xs, ys, a0, spec: engines.solve_level_pallas(
+            xs, ys, a0, spec=spec, params=PARAMS, tol=1e-7, max_sweeps=800,
+            block=BLOCK, gram_threshold=0),
+    }
+
+
+class TestEngineParity:
+    @pytest.mark.parametrize("kernel", list(SPECS))
+    @seeded
+    def test_final_duals_agree(self, kernel, seed):
+        """All engines land on the same (unique) strongly-convex optimum."""
+        xs, ys, a0 = _level_problem(seed)
+        spec = SPECS[kernel]
+        sols = {}
+        for name, solver in _engine_solvers().items():
+            alphas, _, kkts = solver(xs, ys, a0, spec)
+            assert bool(jnp.all(jnp.isfinite(alphas))), (kernel, name)
+            sols[name] = alphas
+        ref = sols["scalar"]
+        for name, alphas in sols.items():
+            err = float(jnp.max(jnp.abs(alphas - ref)))
+            assert err < 1e-3, (kernel, name, err)
+
+    @pytest.mark.parametrize("kernel", list(SPECS))
+    @seeded
+    def test_objective_monotone_across_passes(self, kernel, seed):
+        """Every engine's pass stepper is a descent step on the dual."""
+        xs, ys, _ = _level_problem(seed)
+        spec = SPECS[kernel]
+        x, y = xs[0], ys[0]
+        m = x.shape[0]
+        Q = kf.signed_gram(spec, x, y)
+        p = PARAMS
+
+        def objs(stepper, n=6):
+            alpha = jnp.zeros(2 * m)
+            out = [float(odm.dual_objective(Q, alpha, p, float(m)))]
+            for _ in range(n):
+                alpha = stepper(alpha)
+                out.append(float(odm.dual_objective(Q, alpha, p, float(m))))
+            return out
+
+        q_diag = jnp.diagonal(Q)
+
+        def scalar_step(alpha):
+            zeta, beta = odm.split_alpha(alpha)
+            u = Q @ (zeta - beta)
+            alpha, _ = dual_cd.sweep(Q, q_diag, alpha, u, p, float(m))
+            return alpha
+
+        def block_step(alpha):
+            return dual_cd.solve_block(Q, p, mscale=float(m), block=BLOCK,
+                                       alpha0=alpha, tol=0.0,
+                                       max_outer=1).alpha
+
+        def pallas_step(alpha):
+            out, _, _ = ops.dual_cd_solve(
+                Q, c=p.c, ups=p.ups, theta=p.theta, mscale=float(m),
+                block=BLOCK, n_passes=1, tol=0.0, alpha0=alpha)
+            return out
+
+        for name, stepper in (("scalar", scalar_step),
+                              ("block", block_step),
+                              ("pallas", pallas_step)):
+            trace = objs(stepper)
+            for a, b in zip(trace, trace[1:]):
+                slack = 1e-6 * max(1.0, abs(a))
+                assert b <= a + slack, (kernel, name, trace)
+
+
+class TestAdaptiveEarlyExitKKTOracle:
+    """The in-tile early exit must never weaken the convergence claim."""
+
+    def _solve(self, Q, adaptive, tol=1e-5, n_passes=300):
+        p = PARAMS
+        return ops.dual_cd_solve(
+            Q, c=p.c, ups=p.ups, theta=p.theta, mscale=float(Q.shape[0]),
+            block=BLOCK, n_passes=n_passes, tol=tol, adaptive=adaptive)
+
+    @seeded
+    def test_reported_convergence_implies_true_kkt_below_tol(self, seed):
+        """On random convex QPs the solver may only claim convergence when
+        the *recomputed-from-scratch* full-problem KKT residual is within
+        tol — the incremental u cache and the tile early exits must not
+        let a fake convergence through."""
+        xs, ys, _ = _level_problem(seed)
+        for kernel in ("rbf", "poly"):
+            Q = kf.signed_gram(SPECS[kernel], xs[0], ys[0])
+            tol = 1e-5
+            alpha, kkt, passes = self._solve(Q, adaptive=True, tol=tol)
+            assert int(passes) < 300, (kernel, "did not converge")
+            true_kkt = float(odm.kkt_residual(Q, alpha, PARAMS,
+                                              float(Q.shape[0])))
+            # small fp slack: the in-solver residual is evaluated from the
+            # incrementally maintained u (same math, different rounding)
+            assert true_kkt <= tol * (1.0 + 1e-2) + 1e-7, (kernel, true_kkt)
+
+    @seeded
+    def test_adaptive_never_needs_more_passes(self, seed):
+        """Early exit only skips steps inside already-converged tiles, so
+        the outer pass count can never exceed the fixed-step sweep's."""
+        xs, ys, _ = _level_problem(seed)
+        for kernel in ("rbf", "laplacian"):
+            Q = kf.signed_gram(SPECS[kernel], xs[0], ys[0])
+            _, _, p_ad = self._solve(Q, adaptive=True)
+            _, _, p_fx = self._solve(Q, adaptive=False)
+            assert int(p_ad) <= int(p_fx), (kernel, int(p_ad), int(p_fx))

@@ -168,6 +168,170 @@ class TestRbfGramMatvec:
         assert float(jnp.max(jnp.abs(u - ref))) < 1e-4
 
 
+class TestWarmStartScaleRegression:
+    def test_ray_search_beats_plain_and_inverse_p_scaling(self):
+        """odm.warm_start_scale: on a constructed parent/child merge the
+        closed-form ray search must land a strictly better dual objective
+        than BOTH naive corrections — t = 1 (plain concatenation) and
+        t = 1/p (pure regularizer-scale heuristic). lam is picked so the
+        parent sits between the regularizer-dominant and Q-dominant
+        regimes, where neither naive scale is optimal."""
+        M, p_merge = 256, 2
+        x, y = _data(M=M)
+        params = odm.ODMParams(lam=10.0, theta=0.1, ups=0.5)
+        m = M // p_merge
+        merged = []
+        for k in range(p_merge):
+            sl = slice(k * m, (k + 1) * m)
+            Qk = kf.signed_gram(SPEC, x[sl], y[sl])
+            ak, _, _ = ops.dual_cd_solve(
+                Qk, c=params.c, ups=params.ups, theta=params.theta,
+                mscale=float(m), block=64, n_passes=300, tol=1e-7)
+            merged.append(ak)
+        warm = sodm.merge_alphas(jnp.stack(merged))
+        Q = kf.signed_gram(SPEC, x, y)
+        u = Q @ (warm[:M] - warm[M:])
+        t = float(odm.warm_start_scale(u, warm, params, float(M)))
+        assert 1.0 / p_merge < t < 1.0, t
+
+        def obj(scale):
+            return float(odm.dual_objective(Q, warm * scale, params,
+                                            float(M)))
+
+        f_star, f_one, f_inv = obj(t), obj(1.0), obj(1.0 / p_merge)
+        assert f_star < f_one - 1e-9, (f_star, f_one)
+        assert f_star < f_inv - 1e-9, (f_star, f_inv)
+
+    def test_cold_start_is_identity(self):
+        """A zero init must pass through unscaled (t = 1)."""
+        zeros = jnp.zeros(64)
+        t = odm.warm_start_scale(jnp.zeros(32), zeros, PARAMS, 32.0)
+        assert float(t) == 1.0
+
+
+class TestLineSearchSafeguard:
+    def test_no_nan_at_weak_regularization_pr1_regression(self):
+        """PR 1 regression, pinned: undamped Jacobi tile updates diverge to
+        NaN when the off-diagonal Gram mass beats the m·c·I shift (weak
+        regularization, lam large => c small). The exact line search along
+        the joint step must keep every pass finite and descending — for
+        the pure-jnp block oracle AND the fused pallas pass."""
+        M = 192
+        x, y = _data(M=M)
+        weak = odm.ODMParams(lam=1e4, theta=0.1, ups=0.5)
+        Q = kf.signed_gram(SPEC, x, y)
+        from repro.core import dual_cd
+        res = dual_cd.solve_block(Q, weak, mscale=float(M), block=32,
+                                  tol=1e-6, max_outer=200)
+        assert bool(jnp.all(jnp.isfinite(res.alpha))), "block oracle NaN"
+        a_p, kkt, _ = ops.dual_cd_solve(
+            Q, c=weak.c, ups=weak.ups, theta=weak.theta, mscale=float(M),
+            block=32, n_passes=200, tol=1e-6)
+        assert bool(jnp.all(jnp.isfinite(a_p))), "pallas NaN"
+        assert float(kkt) < 1e-4, float(kkt)
+        f0 = float(odm.dual_objective(Q, jnp.zeros(2 * M), weak, float(M)))
+        f1 = float(odm.dual_objective(Q, a_p, weak, float(M)))
+        assert f1 < f0, (f1, f0)
+
+
+class TestFusedPassOpCount:
+    def test_exactly_one_pallas_call_per_pass(self):
+        """Acceptance: the fused pass loop issues exactly ONE pallas_call
+        per pass — tile sweeps and the Gram matvec together — on both the
+        dense and the matrix-free path (the PR 1 layout used two kernel
+        launches: the sweep + a separate matvec)."""
+        from repro.kernels import dual_cd_block as cdk, gram as gram_mod
+
+        K, m, B, d = 2, 64, 32, 8
+        key = jax.random.PRNGKey(0)
+        x = jax.random.normal(key, (K, m, d))
+        y = jnp.sign(jax.random.normal(jax.random.fold_in(key, 1), (K, m)))
+        qb = jax.vmap(lambda q: cdk.extract_diag_blocks(q, B))(
+            jax.vmap(lambda xk, yk: kf.signed_gram(SPEC, xk, yk))(x, y))
+        a = jnp.zeros((K, m // B, 2 * B))
+        u = jnp.zeros((K, m // B, B))
+        v = jnp.ones((K, m // B, B))
+        p = PARAMS
+
+        srcs = {
+            "dense": gram_mod.DenseSource(
+                jax.vmap(lambda xk, yk: kf.signed_gram(SPEC, xk, yk))(x, y)),
+            "mfree": gram_mod.make_kernel_source(SPEC, x, y, bm=B, bn=B,
+                                                 interpret=True),
+        }
+        for name, src in srcs.items():
+            calls = ops.count_pallas_calls(lambda src=src: cdk.fused_cd_pass(
+                qb, src, a, u, v, c=p.c, ups=p.ups, theta=p.theta,
+                mscale=float(m), n_steps=2 * B, exit_tol=0.0,
+                interpret=True))
+            assert calls == 1, (name, calls)
+
+
+class TestFusedPassNumericalParity:
+    @pytest.mark.parametrize("source", ["dense", "mfree"])
+    def test_fused_equals_two_launch_layout(self, source):
+        """The fused pass and the two-launch layout run the same math —
+        solve_level(fused=True) must reproduce fused=False bit-for-bit-ish
+        on both gram sources (the TPU path vs the interpret-mode path)."""
+        from repro.kernels import dual_cd_block as cdk, gram as gram_mod
+
+        K, m, B, d = 2, 64, 16, 6
+        key = jax.random.PRNGKey(3)
+        x = jax.random.normal(key, (K, m, d))
+        y = jnp.sign(jax.random.normal(jax.random.fold_in(key, 1), (K, m)))
+        Qs = jax.vmap(lambda xk, yk: kf.signed_gram(SPEC, xk, yk))(x, y)
+        qb = jax.vmap(lambda q: cdk.extract_diag_blocks(q, B))(Qs)
+        if source == "dense":
+            src = gram_mod.DenseSource(Qs)
+        else:
+            src = gram_mod.make_kernel_source(SPEC, x, y, bm=B, bn=B,
+                                              interpret=True)
+        p = PARAMS
+        outs = {}
+        for fused in (True, False):
+            a, kkts, passes = cdk.solve_level(
+                qb, src, jnp.zeros((K, 2 * m)), c=p.c, ups=p.ups,
+                theta=p.theta, mscale=float(m), n_passes=100, tol=1e-6,
+                fused=fused, interpret=True)
+            outs[fused] = (a, int(passes))
+        assert outs[True][1] == outs[False][1]
+        err = float(jnp.max(jnp.abs(outs[True][0] - outs[False][0])))
+        assert err < 1e-6, err
+
+
+class TestMaterializedFallbackWarning:
+    def test_warns_once_with_memory_estimate(self, monkeypatch):
+        """A kernel without a matrix-free lowering above gram_threshold
+        must warn (once, with the memory estimate) instead of silently
+        materializing the O(m²) Gram."""
+        import warnings as _warnings
+        from repro.kernels import gram as gram_mod
+
+        monkeypatch.setattr(gram_mod, "MATRIX_FREE_KERNELS", ("rbf",))
+        monkeypatch.setattr(engines, "_MATERIALIZED_WARNED", set())
+        K, m, d = 2, 48, 5
+        key = jax.random.PRNGKey(0)
+        xs = jax.random.normal(key, (K, m, d))
+        ys = jnp.sign(jax.random.normal(jax.random.fold_in(key, 1), (K, m)))
+        a0 = jnp.zeros((K, 2 * m))
+        spec = kf.make_spec("poly", gamma=0.2, degree=2)
+        with _warnings.catch_warnings(record=True) as caught:
+            _warnings.simplefilter("always")
+            for _ in range(2):
+                engines.solve_level_pallas(
+                    xs, ys, a0, spec=spec, params=PARAMS, tol=1e-4,
+                    max_sweeps=50, block=16, gram_threshold=0)
+        relevant = [w for w in caught
+                    if "matrix-free" in str(w.message)]
+        assert len(relevant) == 1, [str(w.message) for w in caught]
+        assert "GiB" in str(relevant[0].message)
+
+    def test_all_spec_kernels_have_matrix_free_path(self):
+        """After the tentpole no KernelSpec family may hit the fallback."""
+        from repro.kernels import gram as gram_mod
+        assert set(kf.KERNELS) <= set(gram_mod.MATRIX_FREE_KERNELS)
+
+
 class TestShardedAccounting:
     def test_tail_not_resolved_twice_and_levels_run_true(self):
         """Regression: with a 1-device mesh the old driver re-solved the
