@@ -132,7 +132,7 @@ def run(out, quick: bool = False):
                                     (K_parts, m)))
     a0 = jnp.zeros((K_parts, 2 * m))
     t_ref = None
-    for name in engines.ENGINES:
+    for name in engines.LEVEL_ENGINES:   # dsvrg is whole-problem, not level
         solver = jax.jit(engines.make_local_solver(name, block=128),
                          static_argnames=("spec", "params", "tol",
                                          "max_sweeps"))

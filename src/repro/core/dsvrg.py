@@ -9,14 +9,35 @@ Per epoch:
      serially in a round-robin, each consuming its local auxiliary samples
      without replacement and passing w to the next node.
 
+Execution model (the jitted epoch-scan driver): both :func:`solve` and
+:func:`solve_sharded` run ALL epochs inside one ``lax.scan`` — each config
+traces exactly once (pinned by ``epoch_trace_count`` in the test battery),
+the iterate w never round-trips to host between epochs, the per-epoch
+objective history is accumulated on device in the scan carry (the sharded
+layout reduces it with a ``psum`` of local loss sums instead of
+re-evaluating the full objective on host), and the ``auto_eta`` smoothness
+step is computed inside the trace (a ``psum`` of E‖x‖² on the mesh) so
+sharded and single-process solves always use the same step size. Every
+partition is pre-sliced into ceil(m/batch) static minibatches with a
+validity mask on the ragged tail, so each sample is consumed exactly once
+per epoch (Alg. 2's without-replacement sampling) whatever the batch size.
+
+The inner-step direction g_w − g_a + h is the hot spot; on TPU it runs as
+ONE fused Pallas pass over the minibatch (margins for w AND the anchor as
+a single MXU op, coefficient difference, back-projection — see
+:mod:`repro.kernels.odm_grad`), with the pure-jnp form
+(:func:`repro.core.odm.svrg_direction`) as the interpret-mode/CPU
+reference (``DSVRGConfig.fused``).
+
 Faithful mode (:func:`solve`) reproduces the serial chain exactly with a
-``lax.scan`` over nodes (inner scan over that node's samples). SPMD mode
-(:func:`solve_sharded`) keeps step 1 as a ``psum`` on the mesh and offers
-two inner-phase schedules:
+``lax.scan`` over nodes (inner scan over that node's minibatches). SPMD
+mode (:func:`solve_sharded`) keeps step 1 as a ``psum`` on the mesh and
+offers two inner-phase schedules:
 
 * ``schedule='serial'`` — the faithful round-robin. On an SPMD mesh every
-  device executes the same chain (replicated compute, zero extra comm);
-  semantically identical to the paper, trivially correct.
+  device executes the same chain over the all-gathered partitions
+  (replicated compute, one slab gather per epoch); semantically identical
+  to the paper, trivially correct.
 * ``schedule='parallel'`` — beyond-paper: all K chains advance in parallel
   from the same anchor and are averaged at epoch end (local-SGD style).
   One extra O(d) all-reduce per epoch; K× less wall-clock per epoch. Lee
@@ -25,19 +46,21 @@ two inner-phase schedules:
   ablates both.
 
 The objective/gradients are the primal ODM of Section 3.3 (see
-repro.core.odm.{primal_objective, minibatch_grad}).
+repro.core.odm.{primal_objective, svrg_direction}).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import odm
 from repro.core import partition as part_mod
-from repro.core.odm import ODMParams, minibatch_grad, primal_grad, primal_objective
+from repro.core.odm import ODMParams
 
 Array = jax.Array
 
@@ -47,154 +70,343 @@ class DSVRGConfig:
     n_partitions: int = 8
     n_landmarks: int = 8
     epochs: int = 10
-    eta: float = 0.0                # <= 0: auto = 0.5 / L_hat (see below)
+    eta: float = 0.0                # <= 0: auto = 0.5 / L_hat (see auto_eta)
     batch: int = 1                  # inner minibatch size (1 = paper-faithful)
     schedule: str = "serial"        # serial | parallel
     partition_strategy: str = "stratified"
+    fused: bool | None = None       # None: fused Pallas direction kernel when
+    #                                 compiled (TPU), jnp reference under
+    #                                 interpret mode / CPU
 
 
 def auto_eta(x: Array, params: ODMParams, frac: float = 0.5) -> float:
     """Step size from the smoothness of the per-instance objective:
     L_hat = 1 + s * E||x||^2 with s = lam/(1-theta)^2 (the Hessian of the
-    quadratic-hinge term is bounded by s x xᵀ; the ridge adds 1)."""
+    quadratic-hinge term is bounded by s x xᵀ; the ridge adds 1).
+
+    Host-side convenience; the solve drivers evaluate the identical
+    formula inside the trace (sharded: psum of the local ‖x‖² sums), so a
+    solve never pays a host round-trip for it.
+    """
+    return float(_eta_from_sumsq(jnp.sum(x * x), params, x.shape[0], frac))
+
+
+def _eta_from_sumsq(sumsq: Array, params: ODMParams, M: int,
+                    frac: float = 0.5) -> Array:
     s = params.lam / (1.0 - params.theta) ** 2
-    l_hat = 1.0 + s * float(jnp.mean(jnp.sum(x * x, axis=1)))
-    return frac / l_hat
+    return frac / (1.0 + s * sumsq / M)
 
 
 class DSVRGResult(NamedTuple):
     w: Array
     history: Array      # (epochs,) primal objective after each epoch
     perm: Array
+    eta: Array | float = 0.0   # step size actually used (auto or cfg.eta)
 
 
-def _epoch_serial(w: Array, xs: Array, ys: Array, anchor: Array, h: Array,
-                  eta: float, batch: int, params: ODMParams, M: int) -> Array:
-    """One faithful round-robin epoch. xs: (K, m, d) permuted partitions."""
+# ---------------------------------------------------------------------------
+# trace accounting (compile-count pin for the scan drivers)
+# ---------------------------------------------------------------------------
+
+# one append per jit trace of a solve driver (local or sharded). The scan
+# body itself is NOT counted — lax.scan legitimately retraces its body for
+# abstract eval; what we pin is that a whole solve is one trace per config.
+_TRACE_EVENTS: list = []
+
+
+def epoch_trace_count() -> int:
+    """How many times a DSVRG solve driver has been traced (not dispatched)."""
+    return len(_TRACE_EVENTS)
+
+
+def _resolve_fused(cfg: DSVRGConfig) -> bool:
+    if cfg.fused is not None:
+        return cfg.fused
+    from repro.kernels import ops
+    return not ops._INTERPRET
+
+
+# ---------------------------------------------------------------------------
+# batched-epoch building blocks
+# ---------------------------------------------------------------------------
+
+def _pad_batches(xs: Array, ys: Array,
+                 batch: int) -> tuple[Array, Array, Array]:
+    """Pre-slice partitions into static minibatches with a ragged-tail mask.
+
+    xs (K, m, d), ys (K, m) -> xs (K, S, b, d), ys (K, S, b), wts (S, b)
+    with S = ceil(m / b); padded rows have x = 0, y = 0, weight 0, so every
+    real sample is consumed exactly once per epoch and the tail step's mean
+    divides by the true tail size.
+    """
     K, m, d = xs.shape
-    steps = m // batch
+    b = min(batch, m)
+    S = -(-m // b)
+    pad = S * b - m
+    xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0)))
+    ys = jnp.pad(ys, ((0, 0), (0, pad)))
+    wts = (jnp.arange(S * b) < m).astype(xs.dtype).reshape(S, b)
+    return xs.reshape(K, S, b, d), ys.reshape(K, S, b), wts
+
+
+def _direction(w: Array, anchor: Array, h: Array, xb: Array, yb: Array,
+               wb: Array, params: ODMParams, fused: bool) -> Array:
+    """One inner step's g_w − g_a + h: fused Pallas pass or jnp reference."""
+    if fused:
+        from repro.kernels import ops
+        return ops.svrg_grad(w, anchor, h, xb, yb, wb, lam=params.lam,
+                             theta=params.theta, ups=params.ups)
+    return odm.svrg_direction(w, anchor, h, xb, yb, params, wb=wb)
+
+
+def _loss_grad(anchor: Array, xf: Array, yf: Array, params: ODMParams,
+               M: int, fused: bool) -> Array:
+    """Hinge part of the full gradient over (possibly padded) rows, scaled
+    by the TRUE count M. Padded rows (x = 0, y = 0) contribute nothing.
+    The caller adds the ridge term (the anchor itself) after any psum."""
+    if fused:
+        from repro.kernels import ops
+        g = ops.odm_grad(anchor, xf, yf,
+                         lam=params.lam * xf.shape[0] / M,
+                         theta=params.theta, ups=params.ups)
+    else:
+        g = odm.primal_grad(anchor, xf, yf, params, total=M)
+    return g - anchor
+
+
+def _epoch_serial(w: Array, xs: Array, ys: Array, wts: Array, anchor: Array,
+                  h: Array, eta: Array, params: ODMParams,
+                  fused: bool) -> Array:
+    """One faithful round-robin epoch. xs: (K, S, b, d) pre-sliced
+    minibatches; wts (S, b) masks each step's ragged-tail padding."""
 
     def node_body(w, xk_yk):
         xk, yk = xk_yk
 
         def inner(w, sl):
-            xb = jax.lax.dynamic_slice(xk, (sl * batch, 0), (batch, d))
-            yb = jax.lax.dynamic_slice(yk, (sl * batch,), (batch,))
-            g_w = minibatch_grad(w, xb, yb, params, M)
-            g_a = minibatch_grad(anchor, xb, yb, params, M)
-            return w - eta * (g_w - g_a + h), None
+            xb, yb, wb = sl
+            return w - eta * _direction(w, anchor, h, xb, yb, wb, params,
+                                        fused), None
 
-        w, _ = jax.lax.scan(inner, w, jnp.arange(steps))
+        w, _ = jax.lax.scan(inner, w, (xk, yk, wts))
         return w, None
 
     w, _ = jax.lax.scan(node_body, w, (xs, ys))
     return w
 
 
-def _epoch_parallel(w: Array, xs: Array, ys: Array, anchor: Array, h: Array,
-                    eta: float, batch: int, params: ODMParams, M: int) -> Array:
+def _epoch_parallel(w: Array, xs: Array, ys: Array, wts: Array,
+                    anchor: Array, h: Array, eta: Array, params: ODMParams,
+                    fused: bool) -> Array:
     """Beyond-paper: K independent chains from the same anchor, averaged."""
-    K, m, d = xs.shape
-    steps = m // batch
 
     def chain(xk, yk):
         def inner(wk, sl):
-            xb = jax.lax.dynamic_slice(xk, (sl * batch, 0), (batch, d))
-            yb = jax.lax.dynamic_slice(yk, (sl * batch,), (batch,))
-            g_w = minibatch_grad(wk, xb, yb, params, M)
-            g_a = minibatch_grad(anchor, xb, yb, params, M)
-            return wk - eta * (g_w - g_a + h), None
-        wk, _ = jax.lax.scan(inner, w, jnp.arange(steps))
+            xb, yb, wb = sl
+            return wk - eta * _direction(wk, anchor, h, xb, yb, wb, params,
+                                         fused), None
+
+        wk, _ = jax.lax.scan(inner, w, (xk, yk, wts))
         return wk
 
     ws = jax.vmap(chain)(xs, ys)                     # (K, d)
     return jnp.mean(ws, axis=0)
 
 
-def solve(x: Array, y: Array, params: ODMParams, cfg: DSVRGConfig,
-          key: jax.Array, w0: Array | None = None) -> DSVRGResult:
-    """Single-process DSVRG (Algorithm 2)."""
-    from repro.core import kernel_fns as kf
-    M, d = x.shape
-    K = cfg.n_partitions
-    if M % K != 0:
-        raise ValueError(f"K={K} must divide M={M}")
+def _flatten(xs: Array, ys: Array, wts: Array):
+    """(K, S, b, *) batch layout -> flat padded rows + per-row weights."""
+    K, S, b = ys.shape
+    xf = xs.reshape(K * S * b, -1)
+    yf = ys.reshape(K * S * b)
+    wf = jnp.broadcast_to(wts[None], (K, S, b)).reshape(K * S * b)
+    return xf, yf, wf
 
+
+def _partition_perm(x: Array, cfg: DSVRGConfig, K: int,
+                    key: jax.Array) -> Array:
+    from repro.core import kernel_fns as kf
+    M = x.shape[0]
     if cfg.partition_strategy == "stratified":
         # linear kernel: strata in input space (phi = identity)
         spec = kf.KernelSpec(name="linear")
         plan = part_mod.make_plan(spec, x, cfg.n_landmarks, K, key)
-        perm = plan.perm
-    else:
-        perm = part_mod.random_partitions(M, K, key)
-    xp, yp = x[perm], y[perm]
-    xs = xp.reshape(K, M // K, d)
-    ys = yp.reshape(K, M // K)
+        return plan.perm
+    return part_mod.random_partitions(M, K, key)
 
-    w = jnp.zeros(d, x.dtype) if w0 is None else w0
+
+# ---------------------------------------------------------------------------
+# single-process driver
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("params", "cfg", "M"))
+def _run(w0: Array, xs: Array, ys: Array, wts: Array, *, params: ODMParams,
+         cfg: DSVRGConfig, M: int):
+    """All epochs of a single-process solve in one trace (lax.scan)."""
+    _TRACE_EVENTS.append(("local", cfg, M))
+    fused = _resolve_fused(cfg)
     epoch_fn = _epoch_serial if cfg.schedule == "serial" else _epoch_parallel
-    eta = cfg.eta if cfg.eta > 0 else auto_eta(x, params)
+    xf, yf, wf = _flatten(xs, ys, wts)
+    if cfg.eta > 0:
+        eta = jnp.asarray(cfg.eta, xs.dtype)
+    else:
+        eta = _eta_from_sumsq(jnp.sum(wf * jnp.sum(xf * xf, axis=-1)),
+                              params, M).astype(xs.dtype)
 
-    @jax.jit
-    def one_epoch(w):
+    def epoch(w, _):
         anchor = w
-        h = primal_grad(anchor, xp, yp, params)      # full gradient (Alg.2 l.7-9)
-        w = epoch_fn(w, xs, ys, anchor, h, eta, cfg.batch, params, M)
-        return w, primal_objective(w, xp, yp, params)
+        h = anchor + _loss_grad(anchor, xf, yf, params, M, fused)
+        w = epoch_fn(w, xs, ys, wts, anchor, h, eta, params, fused)
+        return w, odm.primal_objective(w, xf, yf, params, weights=wf,
+                                       total=M)
 
-    hist = []
-    for _ in range(cfg.epochs):
-        w, obj = one_epoch(w)
-        hist.append(obj)
-    return DSVRGResult(w=w, history=jnp.stack(hist), perm=perm)
+    w, hist = jax.lax.scan(epoch, w0, None, length=cfg.epochs)
+    return w, hist, eta
+
+
+def solve(x: Array, y: Array, params: ODMParams, cfg: DSVRGConfig,
+          key: jax.Array, w0: Array | None = None) -> DSVRGResult:
+    """Single-process DSVRG (Algorithm 2)."""
+    M, d = x.shape
+    K = cfg.n_partitions
+    if M % K != 0:
+        raise ValueError(f"K={K} must divide M={M}")
+    if cfg.schedule not in ("serial", "parallel"):
+        raise ValueError(f"unknown schedule {cfg.schedule!r}")
+
+    perm = _partition_perm(x, cfg, K, key)
+    xp, yp = x[perm], y[perm]
+    xs, ys, wts = _pad_batches(xp.reshape(K, M // K, d),
+                               yp.reshape(K, M // K), cfg.batch)
+    w0 = jnp.zeros(d, x.dtype) if w0 is None else w0
+    w, hist, eta = _run(w0, xs, ys, wts, params=params, cfg=cfg, M=M)
+    return DSVRGResult(w=w, history=hist, perm=perm, eta=eta)
 
 
 # ---------------------------------------------------------------------------
 # SPMD engine
 # ---------------------------------------------------------------------------
 
-def make_sharded_epoch(mesh: jax.sharding.Mesh, params: ODMParams,
-                       cfg: DSVRGConfig, M: int, data_axis: str = "data",
-                       eta: float | None = None):
-    """Builds a jit'd SPMD epoch function over partitions sharded on
-    ``data_axis``: (w, xs, ys) -> (w', local_obj_sum).
+def _gather_slab(xs: Array, ys: Array,
+                 data_axis: str) -> tuple[Array, Array]:
+    """All-gather the (K, S, b, ·) partition slab for the serial chain."""
+    return (jax.lax.all_gather(xs, data_axis, tiled=True),
+            jax.lax.all_gather(ys, data_axis, tiled=True))
 
-    Step 1 (full gradient) is a ``psum`` — the paper's single center-node
-    reduction. Step 2 follows cfg.schedule:
-      * 'parallel': each device advances the chains of its local partitions
-        and a final ``pmean`` averages — total 2 all-reduces of O(d)/epoch.
-      * 'serial': every device runs the full serial chain over the
-        *gathered* partitions (one all-gather of the data slab; exact
-        paper semantics, used for validation at small scale).
+
+def _sharded_eta(xs: Array, ys: Array, wts: Array, params: ODMParams,
+                 cfg: DSVRGConfig, M: int, data_axis: str,
+                 eta: float | None) -> Array:
+    """Step size inside the shard_map body. Explicit eta wins; otherwise
+    auto_eta from the *sharded* data — a psum of the local ‖x‖² sums, so
+    every device (and the single-process driver) lands on the identical
+    step size. This replaces the old hardcoded 0.05 fallback."""
+    if eta is not None:
+        return jnp.asarray(eta, xs.dtype)
+    if cfg.eta > 0:
+        return jnp.asarray(cfg.eta, xs.dtype)
+    xf, _, wf = _flatten(xs, ys, wts)
+    sumsq = jax.lax.psum(jnp.sum(wf * jnp.sum(xf * xf, axis=-1)), data_axis)
+    return _eta_from_sumsq(sumsq, params, M).astype(xs.dtype)
+
+
+def _sharded_epoch(w: Array, xs: Array, ys: Array, wts: Array, eta: Array,
+                   params: ODMParams, cfg: DSVRGConfig, M: int,
+                   data_axis: str, fused: bool,
+                   gathered: tuple[Array, Array] | None = None
+                   ) -> tuple[Array, Array]:
+    """One epoch inside a shard_map body: (w, local slab) -> (w', obj).
+
+    Step 1 (full gradient) is a psum — the paper's single center-node
+    reduction. Step 2 follows cfg.schedule (see module docs). The returned
+    objective is the GLOBAL primal objective, assembled on device from the
+    psum of local loss sums plus one ridge term — no host re-evaluation.
+    ``gathered`` lets the epoch-scan driver all-gather the (loop-
+    invariant) serial-schedule slab ONCE outside the scan instead of once
+    per epoch — XLA does not hoist collectives out of while loops.
+    """
+    anchor = w
+    xf, yf, wf = _flatten(xs, ys, wts)
+    g_local = _loss_grad(anchor, xf, yf, params, M, fused)
+    h = jax.lax.psum(g_local, data_axis) + anchor
+
+    if cfg.schedule == "parallel":
+        wk = _epoch_parallel(w, xs, ys, wts, anchor, h, eta, params, fused)
+        w = jax.lax.pmean(wk, data_axis)
+    else:
+        xg, yg = gathered if gathered is not None else \
+            _gather_slab(xs, ys, data_axis)
+        w = _epoch_serial(w, xg, yg, wts, anchor, h, eta, params, fused)
+
+    ridge = 0.5 * w @ w
+    loss_local = odm.primal_objective(w, xf, yf, params, weights=wf,
+                                      total=M) - ridge
+    obj = jax.lax.psum(loss_local, data_axis) + ridge
+    return w, obj
+
+
+@functools.lru_cache(maxsize=None)
+def _make_sharded_run(mesh: jax.sharding.Mesh, params: ODMParams,
+                      cfg: DSVRGConfig, M: int, data_axis: str):
+    """jit(shard_map) over ALL epochs: (w0, xs, ys, wts) -> (w, hist, eta).
+
+    Cached per (mesh, params, cfg, M, data_axis) so repeated solves reuse
+    one trace; the epoch loop is a lax.scan with the on-device objective
+    history in the scanned carry.
     """
     from jax.experimental.shard_map import shard_map
 
-    eta_v = eta if eta is not None else (cfg.eta if cfg.eta > 0 else 0.05)
+    fused = _resolve_fused(cfg)
+
+    def run(w0, xs, ys, wts):
+        eta = _sharded_eta(xs, ys, wts, params, cfg, M, data_axis, None)
+        # the serial chain consumes the full slab every epoch — gather it
+        # once here, not once per scan iteration
+        gathered = _gather_slab(xs, ys, data_axis) \
+            if cfg.schedule == "serial" else None
+
+        def epoch(w, _):
+            return _sharded_epoch(w, xs, ys, wts, eta, params, cfg, M,
+                                  data_axis, fused, gathered=gathered)
+
+        w, hist = jax.lax.scan(epoch, w0, None, length=cfg.epochs)
+        return w, hist, eta
+
+    shm = shard_map(
+        run, mesh=mesh,
+        in_specs=(P(), P(data_axis), P(data_axis), P()),
+        out_specs=(P(), P(), P()),
+        check_rep=False,     # the SVRG carry w becomes data-varying inside
+    )
+
+    def traced(w0, xs, ys, wts):
+        _TRACE_EVENTS.append(("sharded", cfg, M))
+        return shm(w0, xs, ys, wts)
+
+    return jax.jit(traced)
+
+
+def make_sharded_epoch(mesh: jax.sharding.Mesh, params: ODMParams,
+                       cfg: DSVRGConfig, M: int, data_axis: str = "data",
+                       eta: float | None = None):
+    """Builds a jit'd SPMD *single*-epoch function over partitions sharded
+    on ``data_axis``: (w, xs, ys) -> (w', obj_global). Validation helper —
+    production solves go through the epoch-scan driver (solve_sharded),
+    which never hands w back to host between epochs.
+
+    When ``eta`` is omitted and ``cfg.eta <= 0`` the step size is the
+    ``auto_eta`` smoothness step computed from the sharded data (psum of
+    the local ‖x‖² sums) — identical to the single-process step size.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    fused = _resolve_fused(cfg)
 
     def epoch(w, xs, ys):
         # xs: (K_loc, m, d) local slab on each device
-        anchor = w
-        K_loc, m, d = xs.shape
-        xf = xs.reshape(K_loc * m, d)
-        yf = ys.reshape(K_loc * m)
-        # local sum of per-instance gradients; psum -> full gradient.
-        # primal_grad averages internally over its rows, so rescale to the
-        # global mean: local_mean * (local_count / M) summed over devices.
-        g_local = primal_grad(anchor, xf, yf, params) - anchor
-        g_local = g_local * (xf.shape[0] / M)
-        h = jax.lax.psum(g_local, data_axis) + anchor
-
-        if cfg.schedule == "parallel":
-            wk = _epoch_parallel(w, xs, ys, anchor, h, eta_v, cfg.batch,
-                                 params, M)
-            w = jax.lax.pmean(wk, data_axis)
-        else:
-            xg = jax.lax.all_gather(xs, data_axis, tiled=True)   # (K, m, d)
-            yg = jax.lax.all_gather(ys, data_axis, tiled=True)
-            w = _epoch_serial(w, xg, yg, anchor, h, eta_v, cfg.batch,
-                              params, M)
-        obj_local = primal_objective(w, xf, yf, params)
-        return w, obj_local
+        xsb, ysb, wts = _pad_batches(xs, ys, cfg.batch)
+        eta_v = _sharded_eta(xsb, ysb, wts, params, cfg, M, data_axis, eta)
+        return _sharded_epoch(w, xsb, ysb, wts, eta_v, params, cfg, M,
+                              data_axis, fused)
 
     return jax.jit(shard_map(
         epoch, mesh=mesh,
@@ -206,29 +418,24 @@ def make_sharded_epoch(mesh: jax.sharding.Mesh, params: ODMParams,
 
 def solve_sharded(x: Array, y: Array, params: ODMParams, cfg: DSVRGConfig,
                   key: jax.Array, mesh: jax.sharding.Mesh,
-                  data_axis: str = "data") -> DSVRGResult:
-    from repro.core import kernel_fns as kf
+                  data_axis: str = "data",
+                  w0: Array | None = None) -> DSVRGResult:
     M, d = x.shape
     K = cfg.n_partitions
     n_dev = mesh.shape[data_axis]
+    if M % K != 0:
+        raise ValueError(f"K={K} must divide M={M}")
     if K % n_dev != 0:
         raise ValueError(f"K={K} must be a multiple of data axis size {n_dev}")
+    if cfg.schedule not in ("serial", "parallel"):
+        raise ValueError(f"unknown schedule {cfg.schedule!r}")
 
-    spec = kf.KernelSpec(name="linear")
-    if cfg.partition_strategy == "stratified":
-        plan = part_mod.make_plan(spec, x, cfg.n_landmarks, K, key)
-        perm = plan.perm
-    else:
-        perm = part_mod.random_partitions(M, K, key)
+    perm = _partition_perm(x, cfg, K, key)
     xp, yp = x[perm], y[perm]
-    xs = xp.reshape(K, M // K, d)
-    ys = yp.reshape(K, M // K)
+    xs, ys, wts = _pad_batches(xp.reshape(K, M // K, d),
+                               yp.reshape(K, M // K), cfg.batch)
 
-    eta = cfg.eta if cfg.eta > 0 else auto_eta(x, params)
-    epoch_fn = make_sharded_epoch(mesh, params, cfg, M, data_axis, eta=eta)
-    w = jnp.zeros(d, x.dtype)
-    hist = []
-    for _ in range(cfg.epochs):
-        w, _ = epoch_fn(w, xs, ys)
-        hist.append(primal_objective(w, xp, yp, params))
-    return DSVRGResult(w=w, history=jnp.stack(hist), perm=perm)
+    run = _make_sharded_run(mesh, params, cfg, M, data_axis)
+    w0 = jnp.zeros(d, x.dtype) if w0 is None else w0
+    w, hist, eta = run(w0, xs, ys, wts)
+    return DSVRGResult(w=w, history=hist, perm=perm, eta=eta)

@@ -32,6 +32,16 @@ Three engines, selected by ``SODMConfig.engine``:
   above the threshold triggers a one-time warning with the memory
   estimate before falling back to a materialized Q — never silently.
 
+A fourth engine name, ``"dsvrg"``, is NOT a level solver: it is the
+paper's "when linear kernel is applied" dispatch (Algorithm 2) to the
+communication-efficient primal SVRG solver (:mod:`repro.core.dsvrg`).
+``sodm.solve``/``solve_sharded`` test :func:`wants_dsvrg` BEFORE entering
+the level loop — explicitly via ``SODMConfig.engine = "dsvrg"`` (linear
+kernel required), or automatically for linear-kernel problems with
+M >= ``SODMConfig.dsvrg_threshold`` — and recover the dual alpha from the
+primal solution through ``odm.alpha_from_w``, so every dual-alpha consumer
+(predict / baselines / benchmarks) reaches it uniformly.
+
 Engines are plain closures so they can be jitted by the caller with
 ``spec``/``params``/``tol``/``max_sweeps`` static and used unchanged
 inside ``shard_map`` bodies.
@@ -50,7 +60,34 @@ from repro.core.odm import ODMParams
 
 Array = jax.Array
 
-ENGINES = ("scalar", "block", "pallas")
+# level solvers (LocalSolver implementations) vs every SODMConfig.engine
+# value — "dsvrg" is a whole-problem dispatch, not a level solver
+LEVEL_ENGINES = ("scalar", "block", "pallas")
+ENGINES = LEVEL_ENGINES + ("dsvrg",)
+
+
+def wants_dsvrg(engine: str | None, kernel_name: str, M: int,
+                threshold: int) -> bool:
+    """The paper's linear-kernel dispatch rule (Section 3.3).
+
+    True when the whole solve should route to the DSVRG primal engine
+    instead of the hierarchical dual level loop: either explicitly
+    (``engine == "dsvrg"``, linear kernel required — raises otherwise) or
+    automatically for a linear-kernel problem at/above ``threshold``
+    instances ("when linear kernel is applied, we extend a communication
+    efficient SVRG method"). The auto-dispatch only applies when the
+    engine is left UNSET (``None``, the ``SODMConfig`` default) — any
+    explicitly named engine, scalar included, is honored whatever the
+    problem size.
+    """
+    if engine == "dsvrg":
+        if kernel_name != "linear":
+            raise ValueError(
+                f"engine='dsvrg' is the paper's linear-kernel path; got "
+                f"kernel {kernel_name!r} — use scalar/block/pallas for "
+                f"nonlinear kernels")
+        return True
+    return engine is None and kernel_name == "linear" and M >= threshold
 
 # kernel names already warned about falling back to a materialized Q
 _MATERIALIZED_WARNED: set[str] = set()
@@ -212,10 +249,18 @@ def solve_level_pallas(xs: Array, ys: Array, alphas: Array, *,
 # registry
 # ---------------------------------------------------------------------------
 
-def make_local_solver(engine: str = "scalar", block: int = 256,
+def make_local_solver(engine: str | None = "scalar", block: int = 256,
                       gram_threshold: int = 4096,
                       adaptive: bool = True) -> LocalSolver:
-    """Resolve an engine name (``SODMConfig.engine``) to a LocalSolver."""
+    """Resolve an engine name (``SODMConfig.engine``) to a LocalSolver.
+
+    ``None`` (the config default, meaning "auto") resolves to the scalar
+    level solver — the auto DSVRG dispatch happens in ``sodm`` *before*
+    the level loop, so by the time a LocalSolver is built the choice is
+    between level engines only.
+    """
+    if engine is None:
+        engine = "scalar"
     if engine == "scalar":
         return solve_level_scalar
     if engine == "block":
@@ -232,4 +277,11 @@ def make_local_solver(engine: str = "scalar", block: int = 256,
                                       gram_threshold=gram_threshold,
                                       adaptive=adaptive)
         return _pallas
-    raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
+    if engine == "dsvrg":
+        raise ValueError(
+            "engine='dsvrg' is a whole-problem primal solver, not a level "
+            "solver — sodm.solve/solve_sharded dispatch it before the "
+            "level loop (see engines.wants_dsvrg)")
+    raise ValueError(
+        f"engine must be one of {LEVEL_ENGINES} (or 'dsvrg'/None at the "
+        f"SODMConfig level), got {engine!r}")

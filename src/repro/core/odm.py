@@ -143,25 +143,48 @@ def margins(w: Array, x: Array, y: Array) -> Array:
     return y * (x @ w)
 
 
-def primal_objective(w: Array, x: Array, y: Array, params: ODMParams) -> Array:
+def _hinge_coef(m: Array, y: Array, params: ODMParams) -> Array:
+    """Per-instance quadratic-hinge coefficient s·(lo + ups·hi)·y.
+
+    s = lam/(1-theta)² is the per-instance scale (no 1/M); every gradient
+    form below divides by its own instance count. Rows with y = 0
+    (padding) get coefficient exactly 0.
+    """
+    s = params.lam / (1.0 - params.theta) ** 2
+    lo = jnp.where(m < 1.0 - params.theta, m + params.theta - 1.0, 0.0)
+    hi = jnp.where(m > 1.0 + params.theta, m - params.theta - 1.0, 0.0)
+    return s * (lo + params.ups * hi) * y
+
+
+def primal_objective(w: Array, x: Array, y: Array, params: ODMParams,
+                     weights: Array | None = None,
+                     total: int | None = None) -> Array:
+    """p(w). ``weights`` masks rows (padded rows get 0); ``total`` is the
+    true instance count when ``x`` carries padding rows — the loss is
+    normalized by it, so a sharded caller can recover the global objective
+    as ``ridge + psum(local - ridge)`` with every shard passing the global
+    M as ``total``."""
     m = margins(w, x, y)
     xi = jnp.maximum(0.0, (1.0 - params.theta) - m)
     eps = jnp.maximum(0.0, m - (1.0 + params.theta))
-    M = x.shape[0]
-    loss = (xi @ xi + params.ups * (eps @ eps)) * params.lam / (
-        2.0 * M * (1.0 - params.theta) ** 2)
+    terms = xi * xi + params.ups * (eps * eps)
+    if weights is not None:
+        terms = weights * terms
+    M = x.shape[0] if total is None else total
+    loss = jnp.sum(terms) * params.lam / (2.0 * M * (1.0 - params.theta) ** 2)
     return 0.5 * w @ w + loss
 
 
-def primal_grad(w: Array, x: Array, y: Array, params: ODMParams) -> Array:
-    """Full-batch grad p(w); matches the mean of per-instance grads below."""
-    M = x.shape[0]
-    m = margins(w, x, y)
-    s = params.lam / (M * (1.0 - params.theta) ** 2)
-    lo = jnp.where(m < 1.0 - params.theta, m + params.theta - 1.0, 0.0)
-    hi = jnp.where(m > 1.0 + params.theta, m - params.theta - 1.0, 0.0)
-    coef = s * (lo + params.ups * hi) * y      # (M,)
-    return w + x.T @ coef
+def primal_grad(w: Array, x: Array, y: Array, params: ODMParams,
+                total: int | None = None) -> Array:
+    """Full-batch grad p(w); matches the mean of per-instance grads below.
+
+    ``total`` is the true instance count when ``x`` carries padding rows —
+    padded rows must have y = 0 (their coefficient is then exactly 0).
+    """
+    M = x.shape[0] if total is None else total
+    coef = _hinge_coef(margins(w, x, y), y, params)      # (M,)
+    return w + (x.T @ coef) / M
 
 
 def per_instance_grad(w: Array, x_i: Array, y_i: Array, params: ODMParams,
@@ -175,10 +198,7 @@ def per_instance_grad(w: Array, x_i: Array, y_i: Array, params: ODMParams,
     """
     del M
     m = y_i * (x_i @ w)
-    s = params.lam / (1.0 - params.theta) ** 2
-    lo = jnp.where(m < 1.0 - params.theta, m + params.theta - 1.0, 0.0)
-    hi = jnp.where(m > 1.0 + params.theta, m - params.theta - 1.0, 0.0)
-    return w + (s * (lo + params.ups * hi) * y_i) * x_i
+    return w + _hinge_coef(m, y_i, params) * x_i
 
 
 def minibatch_grad(w: Array, xb: Array, yb: Array, params: ODMParams,
@@ -190,13 +210,35 @@ def minibatch_grad(w: Array, xb: Array, yb: Array, params: ODMParams,
     ``M`` is accepted for signature parity but unused.
     """
     del M
-    m = yb * (xb @ w)
-    s = params.lam / (1.0 - params.theta) ** 2
-    lo = jnp.where(m < 1.0 - params.theta, m + params.theta - 1.0, 0.0)
-    hi = jnp.where(m > 1.0 + params.theta, m - params.theta - 1.0, 0.0)
-    coef = s * (lo + params.ups * hi) * yb            # (B,)
+    coef = _hinge_coef(yb * (xb @ w), yb, params)     # (B,)
     # mean_i [ w + coef_i x_i ] = w + (1/B) X^T coef
     return w + (xb.T @ coef) / xb.shape[0]
+
+
+def svrg_direction(w: Array, anchor: Array, h: Array, xb: Array, yb: Array,
+                   params: ODMParams, wb: Array | None = None) -> Array:
+    """DSVRG inner-step direction  g_w − g_a + h  on one minibatch.
+
+    Expanding both :func:`minibatch_grad` terms, the ridge parts cancel to
+    ``w − anchor`` and the hinge parts share the same X, so the direction is
+
+        (w − anchor + h) + Xᵀ(coef_w − coef_a) / n_valid
+
+    — one pass over the batch instead of two independent gradients. ``wb``
+    masks ragged-tail padding rows (0 ⇒ excluded from both the coefficient
+    and the mean divisor); omitted means all rows count. This is the pure
+    jnp reference of the fused Pallas kernel
+    (:func:`repro.kernels.ops.svrg_grad`).
+    """
+    mm = yb[:, None] * (xb @ jnp.stack([w, anchor], axis=1))   # (B, 2)
+    dcoef = _hinge_coef(mm[:, 0], yb, params) \
+        - _hinge_coef(mm[:, 1], yb, params)
+    if wb is None:
+        n = xb.shape[0]
+    else:
+        dcoef = wb * dcoef
+        n = jnp.maximum(jnp.sum(wb), 1.0)
+    return (w - anchor + h) + (xb.T @ dcoef) / n
 
 
 # ---------------------------------------------------------------------------
@@ -207,6 +249,25 @@ def w_from_alpha(x: Array, y: Array, alpha: Array) -> Array:
     """KKT: w = X Y (zeta - beta) — linear kernel only."""
     zeta, beta = split_alpha(alpha)
     return x.T @ (y * (zeta - beta))
+
+
+def alpha_from_w(w: Array, x: Array, y: Array, params: ODMParams) -> Array:
+    """Inverse KKT map: dual [zeta; beta] from a primal solution w.
+
+    At a primal stationary point the complementary-slackness conditions
+    give zeta_i = s·xi_i and beta_i = s·ups·eps_i with
+    s = lam/(M(1-theta)²) — substituting back,
+    w = Xᵀ(y ⊙ (zeta − beta)) recovers w exactly. Used by the DSVRG
+    solver engine so a primal linear solve plugs into every dual-alpha
+    consumer (predict / dual_objective / SODMResult). Exact only at
+    stationarity; mid-optimization it is the dual of the *projected*
+    primal point.
+    """
+    m = margins(w, x, y)
+    xi = jnp.maximum(0.0, (1.0 - params.theta) - m)
+    eps = jnp.maximum(0.0, m - (1.0 + params.theta))
+    s = params.lam / (x.shape[0] * (1.0 - params.theta) ** 2)
+    return jnp.concatenate([s * xi, s * params.ups * eps])
 
 
 def decision_function(spec: kf.KernelSpec, x_train: Array, y_train: Array,

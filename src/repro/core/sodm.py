@@ -58,8 +58,21 @@ run, so it is pluggable: ``SODMConfig.engine`` selects a
   rebuild Gram tiles on the fly from the raw features for every kernel
   family (rbf / laplacian / poly / linear — ``repro.kernels.gram``), so
   per-level memory stays O(m·B) instead of O(m²).
+* ``"dsvrg"`` — the paper's linear-kernel path (Algorithm 2): the WHOLE
+  problem routes to the communication-efficient primal SVRG solver
+  (``repro.core.dsvrg``) instead of the hierarchical dual level loop, and
+  the dual alpha is recovered from the primal solution via
+  ``odm.alpha_from_w`` so predict/baselines work unchanged. Also selected
+  AUTOMATICALLY — only when ``engine`` is left unset (None); an explicit
+  scalar/block/pallas choice is always honored — for linear-kernel
+  problems with M >= ``SODMConfig.dsvrg_threshold`` (the paper's "when
+  linear kernel is applied" dispatch); ``SODMConfig.dsvrg`` carries the
+  solver's own epochs/batch/schedule knobs.
 
-All engines honor Algorithm 1's warm starts (line 12) and report 0
+``engine=None`` (the default) otherwise behaves exactly like
+``"scalar"``.
+
+All level engines honor Algorithm 1's warm starts (line 12) and report 0
 sweeps/passes for an already-converged start (line 5's early stop).
 
 Both layouts checkpoint per level through ``level_callback`` for fault
@@ -75,7 +88,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import dsvrg as dsvrg_mod
 from repro.core import engines, kernel_fns as kf
+from repro.core import odm as odm_mod
 from repro.core import partition as part_mod
 from repro.core.odm import ODMParams
 
@@ -93,7 +108,12 @@ class SODMConfig:
     max_sweeps: int = 100      # CD sweep / outer-pass cap per local solve
     early_stop: bool = True    # Algorithm 1 line 5-6
     partition_strategy: str = "stratified"   # stratified | random | cluster
-    engine: str = "scalar"     # scalar | block | pallas (see module docs)
+    engine: str | None = None  # None (auto) | scalar | block | pallas |
+    #                            dsvrg. None runs the scalar level loop
+    #                            EXCEPT for linear-kernel problems with
+    #                            M >= dsvrg_threshold, which auto-route to
+    #                            dsvrg; an explicitly named engine (scalar
+    #                            included) is always honored (module docs)
     block: int = 256           # VMEM tile size of the block/pallas engines
     gram_threshold: int = 4096  # pallas: partitions above this rebuild
     #                             Gram tiles on the fly (repro.kernels.gram,
@@ -103,6 +123,14 @@ class SODMConfig:
     #                            sweep at in-tile KKT <= 0.01*tol (never
     #                            changes the outer exact-KKT convergence
     #                            check)
+    dsvrg: dsvrg_mod.DSVRGConfig = dsvrg_mod.DSVRGConfig(epochs=10, batch=64)
+    #                            solver knobs of the linear-kernel DSVRG
+    #                            route (engine="dsvrg" or auto-dispatch);
+    #                            n_partitions is clamped to divide M
+    dsvrg_threshold: int = 200_000  # linear-kernel problems at/above this
+    #                            many instances auto-route to the DSVRG
+    #                            engine (the paper's "when linear kernel
+    #                            is applied" dispatch)
 
 
 class SODMResult(NamedTuple):
@@ -131,12 +159,76 @@ def split_to_partitions(alpha: Array, K: int) -> Array:
     return jnp.concatenate([zetas, betas], axis=1)
 
 
+def _dsvrg_partitions(M: int, want: int, n_dev: int = 1) -> int:
+    """Largest K <= want that divides M and is a multiple of n_dev."""
+    K = max(want - want % n_dev, n_dev)
+    while K >= n_dev:
+        if M % K == 0:
+            return K
+        K -= n_dev
+    raise ValueError(
+        f"no DSVRG partition count <= {want} divides M={M} and is a "
+        f"multiple of the data axis size {n_dev}")
+
+
+def _solve_dsvrg(spec: kf.KernelSpec, x: Array, y: Array, params: ODMParams,
+                 cfg: SODMConfig, key: jax.Array,
+                 mesh: jax.sharding.Mesh | None = None,
+                 data_axis: str = "data", auto: bool = False) -> SODMResult:
+    """Whole-problem linear-kernel route (see ``engines.wants_dsvrg``).
+
+    Solves the primal with DSVRG (Algorithm 2) and recovers the dual via
+    ``odm.alpha_from_w`` so the result plugs into every alpha consumer.
+    ``levels_run`` is 1 (a single whole-problem solve),
+    ``sweeps_per_level`` reports the epoch count, and ``kkt`` is the
+    primal gradient infinity norm (the natural stationarity residual of
+    the primal path). The outer ``partition_strategy``/``n_landmarks``
+    carry over when DSVRG supports the strategy (stratified/random;
+    cluster/identity keep ``cfg.dsvrg``'s own setting). The solve is
+    epoch-budgeted (``cfg.dsvrg.epochs``) — ``tol``/``max_sweeps`` are
+    level-loop knobs and do not apply here; check the returned ``kkt`` if
+    a stationarity guarantee is needed. An AUTO-dispatched solve on a
+    mesh (``auto=True``) upgrades the default serial schedule to
+    ``"parallel"``: the serial chain is replicated compute over an
+    all-gathered slab — the right validation tool, but exactly wrong for
+    the big-data regime that triggers the auto route. An explicit
+    ``engine="dsvrg"`` keeps whatever ``cfg.dsvrg`` says.
+    """
+    M = x.shape[0]
+    n_dev = mesh.shape[data_axis] if mesh is not None else 1
+    K = _dsvrg_partitions(M, cfg.dsvrg.n_partitions, n_dev)
+    dcfg = dataclasses.replace(cfg.dsvrg, n_partitions=K)
+    if auto and mesh is not None:
+        dcfg = dataclasses.replace(dcfg, schedule="parallel")
+    if cfg.partition_strategy in ("stratified", "random"):
+        dcfg = dataclasses.replace(
+            dcfg, partition_strategy=cfg.partition_strategy,
+            n_landmarks=cfg.n_landmarks)
+    if mesh is not None:
+        res = dsvrg_mod.solve_sharded(x, y, params, dcfg, key, mesh,
+                                      data_axis=data_axis)
+    else:
+        res = dsvrg_mod.solve(x, y, params, dcfg, key)
+    xp, yp = x[res.perm], y[res.perm]
+    alpha = odm_mod.alpha_from_w(res.w, xp, yp, params)
+    # grad p(w) = w - w_from_alpha(alpha_from_w(w)) exactly (the recovered
+    # dual's hinge coefficient is -y⊙(zeta-beta)), so the stationarity
+    # residual reuses the alpha pass instead of a second O(M·d) sweep
+    kkt = jnp.max(jnp.abs(res.w - odm_mod.w_from_alpha(xp, yp, alpha)))
+    return SODMResult(alpha=alpha, perm=res.perm, levels_run=1,
+                      sweeps_per_level=[dcfg.epochs], kkt=kkt)
+
+
 def solve(spec: kf.KernelSpec, x: Array, y: Array, params: ODMParams,
           cfg: SODMConfig, key: jax.Array,
           level_callback: Callable[[int, Array], None] | None = None,
           ) -> SODMResult:
-    """Single-process SODM (Algorithm 1)."""
+    """Single-process SODM (Algorithm 1); linear-kernel problems may route
+    to the DSVRG primal engine (Algorithm 2) — see ``engines.wants_dsvrg``
+    (``level_callback`` does not fire on that path: there are no levels)."""
     M = x.shape[0]
+    if engines.wants_dsvrg(cfg.engine, spec.name, M, cfg.dsvrg_threshold):
+        return _solve_dsvrg(spec, x, y, params, cfg, key)
     K0 = cfg.p ** cfg.levels
     if M % K0 != 0:
         raise ValueError(f"p^L={K0} must divide M={M}")
@@ -220,6 +312,10 @@ def solve_sharded(spec: kf.KernelSpec, x: Array, y: Array, params: ODMParams,
     from jax.experimental.shard_map import shard_map
 
     M = x.shape[0]
+    if engines.wants_dsvrg(cfg.engine, spec.name, M, cfg.dsvrg_threshold):
+        return _solve_dsvrg(spec, x, y, params, cfg, key, mesh=mesh,
+                            data_axis=data_axis,
+                            auto=cfg.engine != "dsvrg")
     K0 = cfg.p ** cfg.levels
     n_dev = mesh.shape[data_axis]
     if K0 % n_dev != 0:

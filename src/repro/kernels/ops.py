@@ -160,6 +160,15 @@ def rbf_gram_matvec(x: Array, g: Array, *, gamma: float,
 # fused ODM gradient
 # ---------------------------------------------------------------------------
 
+def _shrink_bm(bm: int, M: int, d: int) -> int:
+    """Shrink the row-tile so the (bm, d) fp32 slab stays under ~8 MB VMEM
+    (shared policy of the fused ODM gradient kernels)."""
+    bm_eff = min(bm, M)
+    while bm_eff > 8 and bm_eff * d * 4 > 8 * 2 ** 20:
+        bm_eff //= 2
+    return bm_eff
+
+
 def odm_grad(w: Array, x: Array, y: Array, *, lam: float = 1.0,
              theta: float = 0.1, ups: float = 0.5, bm: int = 512) -> Array:
     """Fused primal gradient; pads M (zero rows have margin 0 -> inside the
@@ -167,10 +176,7 @@ def odm_grad(w: Array, x: Array, y: Array, *, lam: float = 1.0,
     => lo = theta - 1 < 0 contributes coef on a zero row: harmless since
     the x row is zero => contributes nothing to Xᵀcoef)."""
     M, d = x.shape
-    bm_eff = min(bm, M)
-    # shrink bm so the (bm, d) slab stays under ~8 MB fp32
-    while bm_eff > 8 and bm_eff * d * 4 > 8 * 2 ** 20:
-        bm_eff //= 2
+    bm_eff = _shrink_bm(bm, M, d)
     xp, _ = _pad_to(x, 0, bm_eff)
     yp, _ = _pad_to(y, 0, bm_eff, value=1.0)
     # padded rows are all-zero in x => contribute nothing; but they do not
@@ -178,6 +184,30 @@ def odm_grad(w: Array, x: Array, y: Array, *, lam: float = 1.0,
     out = _og.odm_grad(w, xp, yp, lam=lam * xp.shape[0] / M, theta=theta,
                        ups=ups, bm=bm_eff, interpret=_INTERPRET)
     return out
+
+
+def svrg_grad(w: Array, anchor: Array, h: Array, x: Array, y: Array,
+              wt: Array | None = None, *, lam: float = 1.0,
+              theta: float = 0.1, ups: float = 0.5, bm: int = 512) -> Array:
+    """Fused DSVRG inner-step direction g_w − g_a + h (see odm_grad.py).
+
+    ``wt`` (B,) masks ragged-tail padding rows (0 ⇒ excluded from the
+    coefficient and the mean divisor); the wrapper's own batch padding is
+    folded into the same mask. Semantically identical to the pure-jnp
+    reference ``repro.core.odm.svrg_direction``.
+    """
+    B, d = x.shape
+    bm_eff = _shrink_bm(bm, B, d)
+    if wt is None:
+        wt = jnp.ones((B,), x.dtype)
+    xp, _ = _pad_to(x, 0, bm_eff)
+    yp, _ = _pad_to(y, 0, bm_eff)
+    wtp, _ = _pad_to(wt, 0, bm_eff)
+    inv_n = (1.0 / jnp.maximum(jnp.sum(wt), 1.0)).reshape(1, 1)
+    s = lam / (1.0 - theta) ** 2
+    return _og.odm_svrg_grad(w, anchor, h, xp, yp, wtp,
+                             inv_n.astype(w.dtype), s=s, theta=theta,
+                             ups=ups, bm=bm_eff, interpret=_INTERPRET)
 
 
 # ---------------------------------------------------------------------------

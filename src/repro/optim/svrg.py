@@ -44,7 +44,15 @@ def refresh(state: SVRGState, params, full_grad) -> SVRGState:
 
 
 def correct(state: SVRGState, grads, anchor_batch_grads) -> tuple[Any, SVRGState]:
-    """g_vr = g(w) - g(anchor) + h on the same minibatch."""
+    """g_vr = g(w) - g(anchor) + h on the same minibatch.
+
+    Pytree-generic (two backward passes feed it). For the convex linear
+    ODM head the same direction is available with NO backward passes as
+    ONE fused pass over the minibatch — margins for w and the anchor as a
+    single MXU op — via ``repro.core.odm.svrg_direction`` (jnp) /
+    ``repro.kernels.ops.svrg_grad`` (Pallas); ``repro.core.dsvrg`` is the
+    full Algorithm 2 driver built on it.
+    """
     out = jax.tree.map(
         lambda g, ga, h: g - ga + h.astype(g.dtype),
         grads, anchor_batch_grads, state.anchor_grad)

@@ -3,11 +3,12 @@
 The paper-table and kernel-micro bench scripts are not exercised by the
 unit suite, so API refactors could silently break them. This smoke tier
 (a) imports every module registered in ``benchmarks.run`` (catches
-syntax/import rot) and (b) *executes* the two scripts named in the issue —
-``kernels_bench`` and ``table2_rbf`` — through their quick paths, so every
-jit/pallas entry point they touch actually compiles. Runs under
-``-m "not slow"``; the ``bench_smoke`` marker (pytest.ini) lets callers
-deselect it separately.
+syntax/import rot) and (b) *executes* the scripts named in the issues —
+``kernels_bench``, ``table2_rbf``, ``table3_linear`` and
+``fig4_gradient`` — through their quick paths, so every jit/pallas entry
+point they touch actually compiles.
+Runs under ``-m "not slow"``; the ``bench_smoke`` marker (pytest.ini) lets
+callers deselect it separately.
 """
 import importlib
 import os
@@ -64,3 +65,35 @@ def test_table2_rbf_quick_executes():
                if line.startswith("table2,svmguide1")}
     assert {"SODM", "SODM-blk", "Ca-ODM", "DiP-ODM", "DC-ODM"} <= methods
     assert any(line.startswith("table2,summary") for line in out)
+
+
+def test_table3_linear_quick_executes():
+    """The linear benchmark can no longer rot silently (ISSUE 3 satellite).
+
+    Executes the full table-3 harness on one tiny data set and pins the
+    acceptance criterion: the DSVRG engine route (`SODMConfig.engine=
+    "dsvrg"` through sodm.solve) lands within 0.5 accuracy points of the
+    dual-CD level-loop path on the quick data set.
+    """
+    from benchmarks import table3_linear
+    out = []
+    table3_linear.run(out, datasets=["svmguide1"], scale_factor=0.1)
+    rows = {line.split(",")[2]: float(line.split(",")[3]) for line in out
+            if line.startswith("table3,svmguide1")}
+    assert {"SODM(dsvrg)", "SODM(dsvrg-eng)", "SODM(dual-cd)", "Ca-ODM",
+            "DiP-ODM", "DC-ODM"} <= set(rows)
+    gap = abs(rows["SODM(dsvrg-eng)"] - rows["SODM(dual-cd)"])
+    assert gap <= 0.005 + 1e-9, f"engine-vs-dual-CD accuracy gap {gap}"
+    assert any(line.startswith("table3,summary") for line in out)
+
+
+def test_fig4_gradient_quick_executes():
+    """One tiny data set through the gradient-methods figure script; all
+    three methods must share the device-computed DSVRG step size."""
+    from benchmarks import fig4_gradient
+    out = []
+    fig4_gradient.run(out, datasets=[("a7a", 0.01)])
+    methods = {line.split(",")[2] for line in out if line.startswith("fig4,")}
+    assert {"DSVRG", "SVRG", "CSVRG", "eta"} <= methods
+    eta = float([line for line in out if ",eta," in line][0].split(",")[3])
+    assert eta > 0.0

@@ -89,12 +89,34 @@ o1 = float(odm.dual_objective(kf.signed_gram(spec, xq, yq), r1.alpha,
 check("sodm sharded objective", abs(o1 - o2) < 1e-3, f"{o1:.5f} vs {o2:.5f}")
 
 # --- 4. DSVRG solve_sharded --------------------------------------------
-dcfg = dsvrg.DSVRGConfig(n_partitions=8, epochs=4, eta=0.05, batch=4,
-                         schedule="parallel")
-rr1 = dsvrg.solve(x, y, params, dcfg, jax.random.PRNGKey(4))
-rr2 = dsvrg.solve_sharded(x, y, params, dcfg, jax.random.PRNGKey(4), mesh)
-dd = abs(float(rr1.history[-1]) - float(rr2.history[-1]))
-check("dsvrg sharded objective", dd < 1e-3, f"diff={dd:.2e}")
+# batch 3 ∤ m = 16: the ragged tail is exercised through the SPMD driver;
+# eta <= 0 exercises the on-device auto_eta psum on a real multi-device
+# mesh (must equal the single-process step size)
+for sched in ("parallel", "serial"):
+    dcfg = dsvrg.DSVRGConfig(n_partitions=8, epochs=4, batch=3,
+                             schedule=sched)
+    rr1 = dsvrg.solve(x, y, params, dcfg, jax.random.PRNGKey(4))
+    rr2 = dsvrg.solve_sharded(x, y, params, dcfg, jax.random.PRNGKey(4),
+                              mesh)
+    dd = abs(float(rr1.history[-1]) - float(rr2.history[-1]))
+    dw = float(jnp.max(jnp.abs(rr1.w - rr2.w)))
+    de = abs(float(rr1.eta) - float(rr2.eta))
+    check(f"dsvrg sharded objective ({sched})", dd < 1e-3, f"diff={dd:.2e}")
+    check(f"dsvrg sharded w parity ({sched})", dw < 1e-4, f"diff={dw:.2e}")
+    check(f"dsvrg sharded auto-eta ({sched})", de < 1e-6, f"diff={de:.2e}")
+
+# --- 4b. SODM dsvrg engine route on the mesh ---------------------------
+ecfg = sodm.SODMConfig(engine="dsvrg",
+                       dsvrg=dsvrg.DSVRGConfig(n_partitions=8, epochs=6,
+                                               batch=4))
+spec_lin = kf.KernelSpec(name="linear")
+er1 = sodm.solve(spec_lin, x, y, params, ecfg, jax.random.PRNGKey(5))
+er2 = sodm.solve_sharded(spec_lin, x, y, params, ecfg, jax.random.PRNGKey(5),
+                         mesh, data_axis="data")
+a1 = odm.accuracy(y, sodm.predict(spec_lin, er1, x, y, x))
+a2 = odm.accuracy(y, sodm.predict(spec_lin, er2, x, y, x))
+da = abs(float(a1) - float(a2))
+check("sodm dsvrg engine sharded acc", da < 0.005, f"{float(a1):.4f} vs {float(a2):.4f}")
 
 # --- 5. elastic resharding (2,4) -> (4,2) ------------------------------
 mesh_b = make_host_mesh((4, 2), ("data", "model"))
