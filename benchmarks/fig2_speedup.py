@@ -53,21 +53,26 @@ def _speedup_curve(res, M, K, p, cores):
             {c: t1 / max(t(c, True), 1.0) for c in cores})
 
 
-def run(out):
+def run(out, quick: bool = False):
+    """``quick=True`` shrinks the data set and level count so the CI smoke
+    tier can execute the full script path (tests/test_benchmarks_smoke.py)
+    — the wave-scheduling model itself is scale-free."""
     out.append("# fig2_speedup: regime,cores,speedup")
-    ds = synthetic.load("phishing", scale=0.4, max_d=128)
-    M = ds.x_train.shape[0] - ds.x_train.shape[0] % 32
+    levels = 3 if quick else 5
+    K = 2 ** levels
+    ds = synthetic.load("phishing", scale=0.06 if quick else 0.4, max_d=128)
+    M = ds.x_train.shape[0] - ds.x_train.shape[0] % K
     x, y = ds.x_train[:M], ds.y_train[:M]
     spec = kf.KernelSpec(name="rbf", gamma=kf.median_gamma(x))
     cores = (1, 2, 4, 8, 16, 32)
 
     for regime, tol in (("tight", 1e-3), ("loose", 2e-2)):
-        cfg = sodm.SODMConfig(p=2, levels=5, n_landmarks=8, tol=tol,
-                              max_sweeps=3000)
+        cfg = sodm.SODMConfig(p=2, levels=levels, n_landmarks=8, tol=tol,
+                              max_sweeps=800 if quick else 3000)
         res = sodm.solve(spec, x, y, PARAMS, cfg, jax.random.PRNGKey(0))
         out.append(f"fig2,{regime},sweeps_per_level,"
                    f"{res.sweeps_per_level}")
-        waves, blockp = _speedup_curve(res, M, 32, 2, cores)
+        waves, blockp = _speedup_curve(res, M, K, 2, cores)
         for c in cores:
             out.append(f"fig2,{regime},{c},waves={waves[c]:.2f},"
                        f"block_parallel={blockp[c]:.2f}")

@@ -122,6 +122,35 @@ def run(out, quick: bool = False):
                f"{legacy}_matvec_launches_saved={legacy - fused}")
     assert fused == 1, fused
 
+    # serving: tiled decision-function scorer (kernels/score.py) — one
+    # pallas_call per request batch and O(B·S_block) memory, vs the dense
+    # (T, S) Gram the seed predict path materialized per call. Both pins
+    # guard the table benchmarks' predict route (sodm.predict /
+    # cascade_predict now score through this kernel).
+    from repro.kernels import score as score_mod
+    Ts, Ss, ds_ = (64, 96, 16) if quick else (512, 1024, 32)
+    bt_ = bs_ = 32
+    xq = jax.random.normal(jax.random.fold_in(KEY, 11), (Ts, ds_))
+    zs = jax.random.normal(jax.random.fold_in(KEY, 12), (Ss, ds_))
+    cs = jax.random.normal(jax.random.fold_in(KEY, 13), (Ss,))
+    score_mod.score_tiles.clear_cache()
+    n_calls = ops.count_pallas_calls(lambda: score_mod.score_tiles(
+        xq, zs, cs, kind="rbf", gamma=0.5, bt=bt_, bs=bs_, bd=ds_,
+        interpret=True))
+    dense_bytes = Ts * Ss * 4                 # the (T, S) Gram block
+    tile_bytes = (bt_ * bs_ + bt_) * 4        # acc + score scratch in VMEM
+    out.append(f"kernels,serve_score_op_count,T={Ts}_S={Ss},{n_calls:d},"
+               f"pallas_calls_per_batch={n_calls}_dense_gram_bytes="
+               f"{dense_bytes}_tile_scratch_bytes={tile_bytes}")
+    assert n_calls == 1, n_calls
+    assert tile_bytes < dense_bytes
+    t_blk, _ = timed(lambda: score_mod.score_blocked(
+        xq, zs, cs, kind="rbf", gamma=0.5, bt=bt_), warmup=1, iters=3)
+    t_dense, _ = timed(lambda: score_mod.score_ref(
+        xq, zs, cs, kind="rbf", gamma=0.5), warmup=1, iters=3)
+    out.append(f"kernels,serve_score_blocked,T={Ts}_S={Ss},{t_blk:.4f},"
+               f"dense_ref={t_dense:.4f}")
+
     # SODM per-level solve: one whole level (K partitions of m rows)
     # through each engine — the hot path the solver-engine layer routes
     from repro.core import engines

@@ -9,8 +9,8 @@ import sys
 import time
 
 from benchmarks import (fig2_speedup, fig4_gradient, kernels_bench,
-                        roofline_report, table2_rbf, table3_linear,
-                        table4_svm)
+                        roofline_report, serve_bench, table2_rbf,
+                        table3_linear, table4_svm)
 
 ALL = {
     "table2": table2_rbf.run,
@@ -20,6 +20,7 @@ ALL = {
     "fig4": fig4_gradient.run,
     "kernels": kernels_bench.run,
     "roofline": roofline_report.run,
+    "serve": serve_bench.run,
 }
 
 

@@ -1,0 +1,118 @@
+"""Serving subsystem benchmark: latency/throughput vs batch size,
+compressed vs exact artifacts, microbatched vs naive dense predict.
+
+What the numbers must show (the PR 4 acceptance criteria, asserted by
+``tests/test_benchmarks_smoke.py`` through the quick path):
+
+* the compiled + compressed serve path beats the naive dense predict
+  (``odm.decision_function``: a fresh (T, M) test Gram per call) on
+  full-test-set wall-clock (per-batch latencies are reported too, but
+  single-digit CPU batches measure dispatch overhead, not scoring work);
+* its peak scoring memory — one (bt, S) kernel block — is a small
+  fraction of the dense path's (T, M) Gram (reported analytically: both
+  numbers are exact closed forms of the shapes);
+* Nyström compression shrinks the SV slab by >= 2x within the accuracy
+  target, and the compressed model is strictly faster again;
+* the microbatcher's jit cache stays bounded by its bucket ladder however
+  many distinct batch sizes traffic produces.
+
+``run(out, quick=True)`` shrinks the data set so the CI smoke tier
+executes the full script path in seconds.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timed
+from repro import serve
+from repro.core import kernel_fns as kf, odm, sodm
+from repro.data import synthetic
+
+KEY = jax.random.PRNGKey(0)
+
+PARAMS = odm.ODMParams(lam=100.0, theta=0.1, ups=0.5)
+
+
+def run(out, quick: bool = False):
+    out.append("# serve_bench: section,config,value,derived")
+    scale = 0.04 if quick else 0.3
+    ds = synthetic.load("svmguide1", scale=scale, max_d=64)
+    M = ds.x_train.shape[0] - ds.x_train.shape[0] % 8
+    x, y = ds.x_train[:M], ds.y_train[:M]
+    spec = kf.KernelSpec(name="rbf", gamma=kf.median_gamma(x))
+    cfg = sodm.SODMConfig(p=2, levels=2 if quick else 3, n_landmarks=4,
+                          tol=1e-4, max_sweeps=200)
+
+    res, model = sodm.fit(spec, x, y, PARAMS, cfg, jax.random.PRNGKey(1))
+    xp, yp = x[res.perm], y[res.perm]
+    budget = max(8, model.n_sv // 4)
+    comp = serve.compress(model, budget, target=None)
+    out.append(f"serve,artifact,M={M},n_sv={model.n_sv},"
+               f"compressed_sv={comp.n_sv}_gap={comp.gap:.4f}")
+
+    x_test = ds.x_test
+    acc = lambda m: float(odm.accuracy(ds.y_test, m.predict(x_test)))
+    out.append(f"serve,accuracy,exact={acc(model):.4f},"
+               f"compressed={acc(comp):.4f},")
+
+    # --- naive dense predict vs served, per batch size (latency info) -----
+    dense_fn = jax.jit(lambda xt: jnp.sign(
+        odm.decision_function(spec, xp, yp, res.alpha, xt)))
+    scorer = serve.MicrobatchScorer(model, max_batch=256)
+    scorer_c = serve.MicrobatchScorer(comp, max_batch=256)
+    batch_sizes = (1, 8, 64) if quick else (1, 8, 64, 256)
+    for B in batch_sizes:
+        xb = x_test[:B] if B <= x_test.shape[0] else jnp.tile(
+            x_test, (-(-B // x_test.shape[0]), 1))[:B]
+        td, _ = timed(dense_fn, xb, warmup=2, iters=5)
+        ts, _ = timed(scorer.predict, xb, warmup=2, iters=5)
+        tc, _ = timed(scorer_c.predict, xb, warmup=2, iters=5)
+        out.append(f"serve,latency_B={B},dense={td * 1e3:.3f}ms,"
+                   f"served={ts * 1e3:.3f}ms_compressed={tc * 1e3:.3f}ms_"
+                   f"thru={B / tc:.0f}rps")
+
+    # --- acceptance: bulk scoring wall-clock, served vs naive dense -------
+    # (single-digit CPU batches measure dispatch overhead; a request
+    # matrix large enough for the scoring work to dominate measures the
+    # thing the subsystem optimizes)
+    T_bulk = 2048 if quick else 8192
+    reps = -(-T_bulk // x_test.shape[0])
+    x_bulk = jnp.tile(x_test, (reps, 1))[:T_bulk]
+    bulk = serve.MicrobatchScorer(model, max_batch=T_bulk)
+    bulk_c = serve.MicrobatchScorer(comp, max_batch=T_bulk)
+    td, _ = timed(dense_fn, x_bulk, warmup=2, iters=3)
+    ts, _ = timed(bulk.score, x_bulk, warmup=2, iters=3)
+    tc, _ = timed(bulk_c.score, x_bulk, warmup=2, iters=3)
+    out.append(f"serve,wallclock_T={T_bulk},dense={td * 1e3:.3f}ms,"
+               f"served={ts * 1e3:.3f}ms_compressed={tc * 1e3:.3f}ms")
+    out.append(f"serve,summary,compressed_beats_dense,"
+               f"{int(tc <= td)},speedup={td / tc:.2f}x")
+
+    # --- peak scoring memory (closed-form from the shapes) ----------------
+    bt = 256
+    dense_bytes = T_bulk * M * 4                    # the (T, M) test Gram
+    tiled_bytes = min(bt, T_bulk) * model.n_sv * 4  # one row-block vs slab
+    comp_bytes = min(bt, T_bulk) * comp.n_sv * 4
+    out.append(f"serve,peak_bytes,dense={dense_bytes},"
+               f"tiled={tiled_bytes}_compressed={comp_bytes}_"
+               f"ratio={dense_bytes / max(tiled_bytes, 1):.1f}x")
+    assert tiled_bytes < dense_bytes, (tiled_bytes, dense_bytes)
+
+    # --- microbatcher: bounded jit cache + deadline batching --------------
+    sizes = [1, 2, 3, 5, 7, 11, 17, 29, 43, 64]
+    for B in sizes:
+        scorer.score(x_test[:B])
+    out.append(f"serve,jit_cache,batch_sizes_seen={len(sizes)},"
+               f"buckets_compiled={scorer.compiles}_"
+               f"ladder={len(scorer.buckets)}")
+    assert scorer.compiles <= len(scorer.buckets)
+
+    batcher = serve.Batcher(serve.MicrobatchScorer(comp, max_batch=64),
+                            max_batch=16, max_wait=1e-3)
+    arrivals = [(i * 1e-4, x_test[i % x_test.shape[0]])
+                for i in range(64 if quick else 512)]
+    stats = serve.serve_stream(batcher, arrivals)
+    out.append(f"serve,stream,n={len(stats['results'])},"
+               f"mean_batch={stats['mean_batch']:.1f}_"
+               f"p50={stats['p50'] * 1e3:.2f}ms_p95={stats['p95'] * 1e3:.2f}ms")

@@ -1,7 +1,12 @@
-"""Serve a small model with batched requests (prefill + decode loop).
+"""Serve a small *language model* with batched requests (prefill + decode).
+
+This drives the transformer scaffold's serving launcher
+(repro.launch.serve) — KV-cache prefill plus a jit'd decode loop. The
+paper's model (ODM) has its own serving subsystem with compiled
+artifacts, Nyström compression and a microbatching scorer: see
+``examples/serve_odm.py`` and ``repro.serve``.
 
     PYTHONPATH=src python examples/serve_lm.py --arch qwen3-0.6b
-Delegates to the production serving launcher (repro.launch.serve).
 """
 import sys
 

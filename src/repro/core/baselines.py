@@ -118,8 +118,11 @@ def cascade_solve(spec: kf.KernelSpec, x: Array, y: Array, params: ODMParams,
 
 def cascade_predict(spec: kf.KernelSpec, res: CascadeResult,
                     x_test: Array) -> Array:
-    from repro.core import odm
-    return odm.predict(spec, res.x_sv, res.y_sv, res.alpha, x_test)
+    """Served prediction for the cascade survivor set: compiled FittedODM
+    (near-zero duals pruned, linear collapsed to w) through the tiled
+    scorer — the dense (T, M) test Gram of the seed path is gone."""
+    from repro.serve import model as serve_model
+    return serve_model.from_cascade(spec, res).predict(x_test)
 
 
 # ---------------------------------------------------------------------------

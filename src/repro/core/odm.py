@@ -272,7 +272,13 @@ def alpha_from_w(w: Array, x: Array, y: Array, params: ODMParams) -> Array:
 
 def decision_function(spec: kf.KernelSpec, x_train: Array, y_train: Array,
                       alpha: Array, x_test: Array) -> Array:
-    """f(x) = sum_i y_i (zeta_i - beta_i) kappa(x_i, x)."""
+    """f(x) = sum_i y_i (zeta_i - beta_i) kappa(x_i, x).
+
+    Dense oracle: materializes the full (T, M) test Gram. Kept as the
+    exact-expansion reference the serving subsystem is validated against;
+    production scoring goes through :func:`predict` / ``repro.serve``
+    (compiled artifact + tiled matrix-free scorer, no (T, M) block).
+    """
     zeta, beta = split_alpha(alpha)
     coef = y_train * (zeta - beta)
     return kf.gram(spec, x_test, x_train) @ coef
@@ -280,7 +286,15 @@ def decision_function(spec: kf.KernelSpec, x_train: Array, y_train: Array,
 
 def predict(spec: kf.KernelSpec, x_train: Array, y_train: Array,
             alpha: Array, x_test: Array) -> Array:
-    return jnp.sign(decision_function(spec, x_train, y_train, alpha, x_test))
+    """Served prediction: compiles the dual into a ``FittedODM`` (exact-
+    zero coefficients pruned, linear kernels collapsed to w) and scores
+    through the tiled matrix-free kernel — O(T·B) memory instead of the
+    dense (T, M) Gram of :func:`decision_function`. Host-side API (the
+    compile step gathers); call ``FittedODM.predict`` directly inside jit.
+    """
+    from repro.serve import model as serve_model   # deferred: serving layer
+    m = serve_model.compile_model(spec, x_train, y_train, alpha)
+    return m.predict(x_test)
 
 
 def accuracy(y_true: Array, y_pred: Array) -> Array:

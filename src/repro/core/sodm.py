@@ -386,15 +386,75 @@ def solve_sharded(spec: kf.KernelSpec, x: Array, y: Array, params: ODMParams,
 # convenience: fit + predict in original index order
 # ---------------------------------------------------------------------------
 
+# compiled-model cache for the stateless predict() API. The seed-era
+# predict re-gathered x_train[res.perm] / y_train[res.perm] — an O(M·d)
+# permutation gather plus a fresh (T, M) Gram — on EVERY call; compiling
+# the FittedODM once amortizes the gather and SV packing across calls.
+# Entries hold WEAK references to their key arrays: a live weakref proves
+# the id() key has not been recycled, and a dead one invalidates the
+# entry without pinning the (potentially multi-GB) training set in memory
+# for the cache's lifetime. FIFO-capped as a second bound.
+_MODEL_CACHE: dict = {}
+_MODEL_CACHE_CAP = 8
+_PERM_GATHERS = 0          # incremented once per compile (regression pin)
+
+
+def perm_gather_count() -> int:
+    """How many times predict/fit have gathered x_train[res.perm] — the
+    per-call-gather regression test pins this at one per fitted model."""
+    return _PERM_GATHERS
+
+
+def compile_model(spec: kf.KernelSpec, res: SODMResult, x_train: Array,
+                  y_train: Array, **kw):
+    """Compile an ``SODMResult`` into a served ``FittedODM`` (the ONE
+    place the partition permutation is applied). ``kw`` forwards
+    compression knobs (prune_tol / budget / target)."""
+    global _PERM_GATHERS
+    from repro.serve import model as serve_model
+    _PERM_GATHERS += 1
+    return serve_model.from_sodm(spec, res, x_train, y_train, **kw)
+
+
+def _weakrefs(*arrays):
+    import weakref
+    try:
+        return tuple(weakref.ref(a) for a in arrays)
+    except TypeError:                  # non-weakref-able leaf: no liveness
+        return None                    # proof => never cache-hit on it
+
+
+def _cached_model(spec: kf.KernelSpec, res: SODMResult, x_train: Array,
+                  y_train: Array):
+    key = (id(res.alpha), id(res.perm), id(x_train), id(y_train), spec)
+    hit = _MODEL_CACHE.get(key)
+    if hit is not None:
+        model, refs = hit
+        if refs is not None and all(r() is not None for r in refs):
+            return model
+        del _MODEL_CACHE[key]          # an id was (or could be) recycled
+    model = compile_model(spec, res, x_train, y_train)
+    if len(_MODEL_CACHE) >= _MODEL_CACHE_CAP:
+        _MODEL_CACHE.pop(next(iter(_MODEL_CACHE)))
+    _MODEL_CACHE[key] = (model, _weakrefs(res.alpha, res.perm,
+                                          x_train, y_train))
+    return model
+
+
 def fit(spec: kf.KernelSpec, x: Array, y: Array, params: ODMParams,
-        cfg: SODMConfig, key: jax.Array) -> tuple[SODMResult, Array, Array]:
-    """Returns (result, x_perm, y_perm); alpha is aligned with the permuted data."""
+        cfg: SODMConfig, key: jax.Array):
+    """Solve + compile in one step: returns (SODMResult, FittedODM).
+
+    The artifact is the deployable model — the permutation gather and SV
+    packing happen here exactly once, never again at predict time.
+    """
     res = solve(spec, x, y, params, cfg, key)
-    return res, x[res.perm], y[res.perm]
+    return res, _cached_model(spec, res, x, y)
 
 
 def predict(spec: kf.KernelSpec, res: SODMResult, x_train: Array,
             y_train: Array, x_test: Array) -> Array:
-    from repro.core import odm
-    xp, yp = x_train[res.perm], y_train[res.perm]
-    return odm.predict(spec, xp, yp, res.alpha, x_test)
+    """Served prediction through a cached compiled model: the permutation
+    gather runs once per fitted model (pinned by ``perm_gather_count``),
+    and scoring is the tiled matrix-free path — no per-call (T, M) Gram."""
+    return _cached_model(spec, res, x_train, y_train).predict(x_test)

@@ -157,6 +157,51 @@ def rbf_gram_matvec(x: Array, g: Array, *, gamma: float,
 
 
 # ---------------------------------------------------------------------------
+# serving: tiled decision-function scores
+# ---------------------------------------------------------------------------
+
+def decision_scores(x: Array, z: Array, coef: Array, spec, *,
+                    bt: int = 256, bs: int = 256, bd: int = 512,
+                    tiled: bool | None = None) -> Array:
+    """f (T,) = K(x, z) @ coef for arbitrary shapes — the serving hot path.
+
+    ``z`` (S, d) is the packed support-vector slab, ``coef`` (S,) its dual
+    coefficients y ⊙ (ζ − β); ``spec`` is KernelSpec-like. Pads every axis
+    to tile multiples (padded coef entries are 0 so padded SV rows add
+    nothing; padded request rows are sliced off) and never materializes
+    the (T, S) Gram: ``tiled=None`` auto-picks the Pallas kernel when
+    compiled (TPU) and the O(bt·S) jnp streaming scorer under interpret
+    mode, where unrolling the tile grid into the trace would bloat CPU
+    compile time (same policy as ``DSVRGConfig.fused``/``solve_level``).
+    ``tiled=True`` forces the kernel (tests), ``tiled=False`` the dense
+    reference oracle.
+    """
+    from repro.kernels import score as _score
+    T, D = x.shape
+    S = z.shape[0]
+    if tiled is False:
+        return _score.score_ref(x, z, coef, kind=spec.name, gamma=spec.gamma,
+                                degree=spec.degree, coef0=spec.coef0)
+    bt = min(bt, max(8, T))
+    xp, _ = _pad_to(x, 0, bt)
+    if tiled is None and _INTERPRET:
+        out = _score.score_blocked(xp, z, coef, kind=spec.name,
+                                   gamma=spec.gamma, degree=spec.degree,
+                                   coef0=spec.coef0, bt=bt)
+        return out[:T]
+    bs = min(bs, max(8, S))
+    bd = min(bd, max(8, D))
+    zp, _ = _pad_to(z, 0, bs)
+    xp, _ = _pad_to(xp, 1, bd)
+    zp, _ = _pad_to(zp, 1, bd)
+    cp, _ = _pad_to(coef, 0, bs)
+    out = _score.score_tiles(xp, zp, cp, kind=spec.name, gamma=spec.gamma,
+                             degree=spec.degree, coef0=spec.coef0, bt=bt,
+                             bs=bs, bd=bd, interpret=_INTERPRET)
+    return out[:T]
+
+
+# ---------------------------------------------------------------------------
 # fused ODM gradient
 # ---------------------------------------------------------------------------
 

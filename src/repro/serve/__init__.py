@@ -1,0 +1,22 @@
+"""ODM serving subsystem: compiled inference artifacts + throughput scoring.
+
+``repro.serve`` turns any solver output (``SODMResult`` / ``DSVRGResult``
+/ cascade baselines / a raw dual vector) into a deployable
+:class:`FittedODM` artifact — near-zero dual coefficients pruned into a
+packed support-vector slab, linear kernels collapsed to an explicit
+primal ``w``, optional Nyström landmark compression — and scores it
+through the tiled matrix-free decision kernel
+(:mod:`repro.kernels.score`) with microbatching, bucketed jit caches and
+an SV-sharded SPMD path (:mod:`repro.serve.server`).
+"""
+from repro.serve.model import (FittedODM, compile_model, compress,
+                               from_cascade, from_dsvrg, from_sodm,
+                               load_model)
+from repro.serve.server import (Batcher, MicrobatchScorer, score_sharded,
+                                serve_stream)
+
+__all__ = [
+    "FittedODM", "compile_model", "compress", "from_cascade", "from_dsvrg",
+    "from_sodm", "load_model", "Batcher", "MicrobatchScorer",
+    "score_sharded", "serve_stream",
+]

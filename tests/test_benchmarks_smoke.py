@@ -22,7 +22,7 @@ pytestmark = pytest.mark.bench_smoke
 
 BENCH_MODULES = ["run", "common", "kernels_bench", "table2_rbf",
                  "table3_linear", "table4_svm", "fig2_speedup",
-                 "fig4_gradient", "roofline_report"]
+                 "fig4_gradient", "roofline_report", "serve_bench"]
 
 
 @pytest.mark.parametrize("name", BENCH_MODULES)
@@ -33,7 +33,7 @@ def test_bench_module_imports(name):
 def test_run_registry_covers_all_tables():
     from benchmarks import run
     assert set(run.ALL) == {"table2", "table3", "table4", "fig2", "fig4",
-                            "kernels", "roofline"}
+                            "kernels", "roofline", "serve"}
 
 
 def test_kernels_bench_quick_executes():
@@ -52,6 +52,15 @@ def test_kernels_bench_quick_executes():
     assert len(fused) == 1
     assert "pallas_calls_per_pass_fused=1" in fused[0]
     assert "matvec_launches_saved=1" in fused[0]
+    # serving scorer pins (ISSUE 4 satellite): one pallas_call per request
+    # batch, tile scratch a fraction of the dense (T, S) Gram bytes
+    sc = [line for line in out if "serve_score_op_count" in line]
+    assert len(sc) == 1
+    assert "pallas_calls_per_batch=1" in sc[0]
+    dense = int(sc[0].split("dense_gram_bytes=")[1].split("_")[0])
+    tile = int(sc[0].split("tile_scratch_bytes=")[1].split(",")[0])
+    assert tile < dense, (tile, dense)
+    assert any("serve_score_blocked" in line for line in out)
 
 
 def test_table2_rbf_quick_executes():
@@ -85,6 +94,42 @@ def test_table3_linear_quick_executes():
     gap = abs(rows["SODM(dsvrg-eng)"] - rows["SODM(dual-cd)"])
     assert gap <= 0.005 + 1e-9, f"engine-vs-dual-CD accuracy gap {gap}"
     assert any(line.startswith("table3,summary") for line in out)
+
+
+def test_fig2_speedup_quick_executes():
+    """The last previously-untested benchmark script (ISSUE 4 satellite):
+    the scheduling-model figure runs end to end at quick scale and emits
+    both regimes' speedup curves."""
+    from benchmarks import fig2_speedup
+    out = []
+    fig2_speedup.run(out, quick=True)
+    for regime in ("tight", "loose"):
+        assert any(line.startswith(f"fig2,{regime},32,") for line in out), \
+            regime
+        assert any(f"fig2,{regime},sweeps_per_level" in line
+                   for line in out), regime
+
+
+def test_serve_bench_quick_executes():
+    """Serving acceptance (ISSUE 4): the compressed/microbatched path must
+    beat the naive dense predict on wall-clock at quick scale, peak
+    scoring memory must be below the dense (T, M) Gram, and the jit cache
+    must stay inside the bucket ladder (asserted inside the script too)."""
+    from benchmarks import serve_bench
+    out = []
+    serve_bench.run(out, quick=True)
+    summary = [line for line in out if "compressed_beats_dense" in line][0]
+    assert summary.split(",")[3] == "1", summary
+    peak = [line for line in out if line.startswith("serve,peak_bytes")][0]
+    dense = int(peak.split("dense=")[1].split(",")[0])
+    tiled = int(peak.split("tiled=")[1].split("_")[0])
+    assert tiled < dense, peak
+    art = [line for line in out if line.startswith("serve,artifact")][0]
+    n_sv = int(art.split("n_sv=")[1].split(",")[0])
+    comp = int(art.split("compressed_sv=")[1].split("_")[0])
+    assert comp <= max(8, n_sv // 4), art
+    assert any(line.startswith("serve,stream") for line in out)
+    assert any(line.startswith("serve,jit_cache") for line in out)
 
 
 def test_fig4_gradient_quick_executes():

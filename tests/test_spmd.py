@@ -118,6 +118,14 @@ a2 = odm.accuracy(y, sodm.predict(spec_lin, er2, x, y, x))
 da = abs(float(a1) - float(a2))
 check("sodm dsvrg engine sharded acc", da < 0.005, f"{float(a1):.4f} vs {float(a2):.4f}")
 
+# --- 4c. serving: SV slab sharded across the data axis ------------------
+from repro import serve
+smodel = serve.from_sodm(spec, r1, x, y)
+f_rep = smodel.decision_function(x[:48])
+f_shd = serve.score_sharded(smodel, x[:48], mesh, data_axis="data")
+dsv = float(jnp.max(jnp.abs(f_rep - f_shd)))
+check("serve sharded SV-slab scores", dsv < 1e-5, f"diff={dsv:.2e}")
+
 # --- 5. elastic resharding (2,4) -> (4,2) ------------------------------
 mesh_b = make_host_mesh((4, 2), ("data", "model"))
 p_a = elastic.reshard(p, axes, mesh)
