@@ -1,9 +1,27 @@
-"""Shared benchmark harness utilities."""
+"""Shared benchmark harness utilities.
+
+Every table/figure script trains through :func:`train` — the
+``repro.api`` front door — so the benchmarks measure exactly what a user
+of the unified API gets (route resolution, validation, artifact
+compilation included).
+"""
 from __future__ import annotations
 
 import time
 
 import jax
+
+
+def train(problem, x, y, *, route=None, cfg=None, key=None, **estimator_kw):
+    """Fit through ``repro.api.ODMEstimator``; returns (model, report).
+
+    ``report.wall_clock`` is the seconds column every table reports
+    (solve + artifact compile, cold — matching the old ``timed(...,
+    warmup=0)`` convention the scripts used).
+    """
+    from repro.api import ODMEstimator
+    est = ODMEstimator(problem, route=route, cfg=cfg, **estimator_kw)
+    return est.fit(x, y, key)
 
 
 def timed(fn, *args, warmup: int = 1, iters: int = 1, **kw):

@@ -18,18 +18,20 @@ import math
 
 import jax
 
+from benchmarks.common import train
+from repro.api import ProblemSpec
 from repro.core import kernel_fns as kf, odm, sodm
 from repro.data import synthetic
 
 PARAMS = odm.ODMParams(lam=10.0, theta=0.1, ups=0.5)
 
 
-def _speedup_curve(res, M, K, p, cores):
+def _speedup_curve(sweeps_per_level, M, K, p, cores):
     """T(1)/T(c) under wave scheduling of each level's partition solves."""
     levels = []
     m = M // K
     k_l = K
-    for s in res.sweeps_per_level:
+    for s in sweeps_per_level:
         levels.append((int(s), m, k_l))
         m *= p
         k_l //= p
@@ -63,16 +65,19 @@ def run(out, quick: bool = False):
     ds = synthetic.load("phishing", scale=0.06 if quick else 0.4, max_d=128)
     M = ds.x_train.shape[0] - ds.x_train.shape[0] % K
     x, y = ds.x_train[:M], ds.y_train[:M]
-    spec = kf.KernelSpec(name="rbf", gamma=kf.median_gamma(x))
+    problem = ProblemSpec(
+        kernel=kf.KernelSpec(name="rbf", gamma=kf.median_gamma(x)),
+        params=PARAMS)
     cores = (1, 2, 4, 8, 16, 32)
 
     for regime, tol in (("tight", 1e-3), ("loose", 2e-2)):
         cfg = sodm.SODMConfig(p=2, levels=levels, n_landmarks=8, tol=tol,
                               max_sweeps=800 if quick else 3000)
-        res = sodm.solve(spec, x, y, PARAMS, cfg, jax.random.PRNGKey(0))
+        _, rep = train(problem, x, y, route="sodm", cfg=cfg,
+                       key=jax.random.PRNGKey(0))
         out.append(f"fig2,{regime},sweeps_per_level,"
-                   f"{res.sweeps_per_level}")
-        waves, blockp = _speedup_curve(res, M, K, 2, cores)
+                   f"{list(rep.passes)}")
+        waves, blockp = _speedup_curve(rep.passes, M, K, 2, cores)
         for c in cores:
             out.append(f"fig2,{regime},{c},waves={waves[c]:.2f},"
                        f"block_parallel={blockp[c]:.2f}")

@@ -1,18 +1,22 @@
 """Paper Figure 4: gradient-based methods (DSVRG vs SVRG vs CSVRG).
 
-All three share the auto_eta smoothness step; DSVRG's is the one computed
-on device inside its trace (reported back through ``DSVRGResult.eta``) and
-handed to the single-chain baselines so the comparison isolates the
-partitioned round-robin, not the step size. ``datasets`` lets the CI smoke
-tier execute the script path on one tiny set.
+All three train through the unified API's gradient routes and share the
+auto_eta smoothness step: DSVRG's is the one computed on device inside
+its trace (reported back through ``FitReport.eta``) and handed to the
+single-chain baselines via ``DSVRGConfig.eta`` so the comparison isolates
+the partitioned round-robin, not the step size. ``datasets`` lets the CI
+smoke tier execute the script path on one tiny set.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
+import dataclasses
 
-from benchmarks.common import timed
-from repro.core import baselines, dsvrg, odm
+import jax
+
+from benchmarks.common import train
+from repro.api import ProblemSpec
+from repro.core import dsvrg, kernel_fns as kf, odm
+from repro.core.sodm import SODMConfig
 from repro.data import synthetic
 
 PARAMS = odm.ODMParams(lam=100.0, theta=0.1, ups=0.5)
@@ -23,33 +27,32 @@ DATASETS = (("a7a", 0.04), ("ijcnn1", 0.01))
 def run(out, datasets=None):
     out.append("# fig4_gradient: dataset,method,acc,obj,seconds")
     datasets = DATASETS if datasets is None else datasets
+    problem = ProblemSpec(kernel=kf.KernelSpec(name="linear"),
+                          params=PARAMS)
     for name, scale in datasets:
         ds = synthetic.load(name, scale=scale, max_d=256)
         M = ds.x_train.shape[0] - ds.x_train.shape[0] % 8
         x, y = ds.x_train[:M], ds.y_train[:M]
         key = jax.random.PRNGKey(0)
 
-        cfg = dsvrg.DSVRGConfig(n_partitions=8, epochs=6, batch=16,
-                                schedule="parallel")
-        t, res = timed(lambda: dsvrg.solve(x, y, PARAMS, cfg, key), warmup=0)
-        acc = float(odm.accuracy(ds.y_test, jnp.sign(ds.x_test @ res.w)))
+        dcfg = dsvrg.DSVRGConfig(n_partitions=8, epochs=6, batch=16,
+                                 schedule="parallel")
+        model, rep = train(problem, x, y, route="dsvrg",
+                           cfg=SODMConfig(dsvrg=dcfg), key=key)
+        acc = float(odm.accuracy(ds.y_test, model.predict(ds.x_test)))
         out.append(f"fig4,{name},DSVRG,{acc:.4f},"
-                   f"{float(res.history[-1]):.5f},{t:.2f}")
+                   f"{rep.history[-1]:.5f},{rep.wall_clock:.2f}")
 
         # the device-computed step size (== auto_eta on host, pinned by
         # tests/test_dsvrg.py) keeps the baselines on equal footing
-        eta = float(res.eta)
+        eta = rep.eta
         out.append(f"fig4,{name},eta,{eta:.6f},,")
 
-        t, svrg = timed(lambda: baselines.svrg_solve(
-            x, y, PARAMS, epochs=6, eta=eta, key=key, batch=16), warmup=0)
-        acc = float(odm.accuracy(ds.y_test, jnp.sign(ds.x_test @ svrg.w)))
-        out.append(f"fig4,{name},SVRG,{acc:.4f},"
-                   f"{float(svrg.history[-1]):.5f},{t:.2f}")
-
-        t, csvrg = timed(lambda: baselines.csvrg_solve(
-            x, y, PARAMS, epochs=6, eta=eta, key=key, coreset_frac=0.1,
-            batch=16), warmup=0)
-        acc = float(odm.accuracy(ds.y_test, jnp.sign(ds.x_test @ csvrg.w)))
-        out.append(f"fig4,{name},CSVRG,{acc:.4f},"
-                   f"{float(csvrg.history[-1]):.5f},{t:.2f}")
+        gcfg = SODMConfig(dsvrg=dataclasses.replace(
+            dcfg, eta=eta, schedule="serial", coreset_frac=0.1))
+        for label, route in (("SVRG", "svrg"), ("CSVRG", "csvrg")):
+            model, rep = train(problem, x, y, route=route, cfg=gcfg,
+                               key=key)
+            acc = float(odm.accuracy(ds.y_test, model.predict(ds.x_test)))
+            out.append(f"fig4,{name},{label},{acc:.4f},"
+                       f"{rep.history[-1]:.5f},{rep.wall_clock:.2f}")

@@ -24,8 +24,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import timed
+from benchmarks.common import timed, train
 from repro import serve
+from repro.api import ProblemSpec
 from repro.core import kernel_fns as kf, odm, sodm
 from repro.data import synthetic
 
@@ -44,8 +45,10 @@ def run(out, quick: bool = False):
     cfg = sodm.SODMConfig(p=2, levels=2 if quick else 3, n_landmarks=4,
                           tol=1e-4, max_sweeps=200)
 
-    res, model = sodm.fit(spec, x, y, PARAMS, cfg, jax.random.PRNGKey(1))
-    xp, yp = x[res.perm], y[res.perm]
+    model, rep = train(ProblemSpec(kernel=spec, params=PARAMS), x, y,
+                       route="sodm", cfg=cfg, key=jax.random.PRNGKey(1))
+    res = rep.raw                       # SODMResult (the dense oracle
+    xp, yp = x[res.perm], y[res.perm]   # needs the permuted layout)
     budget = max(8, model.n_sv // 4)
     comp = serve.compress(model, budget, target=None)
     out.append(f"serve,artifact,M={M},n_sv={model.n_sv},"

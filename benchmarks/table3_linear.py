@@ -1,15 +1,16 @@
 """Paper Table 3 / Figure 3: accuracy + time, linear kernel (DSVRG).
 
-Rows per data set:
-  * SODM(dsvrg)      — repro.core.dsvrg.solve called directly (Alg. 2)
-  * SODM(dsvrg-eng)  — the SAME solve reached through sodm.solve with
-                       SODMConfig.engine="dsvrg" (the linear-kernel
-                       engine route; validates the dual recovery)
-  * SODM(dual-cd)    — sodm.solve through the hierarchical dual level
-                       loop (engine="scalar"; an explicit engine is never
-                       auto-rerouted) — the accuracy oracle the dsvrg
-                       rows must match
-  * Ca-ODM / DiP-ODM / DC-ODM — Section 4 baselines
+Rows per data set (all trained through the unified API):
+  * SODM(dsvrg)      — the explicit ``route="dsvrg"`` registry entry
+                       (Alg. 2)
+  * SODM(dsvrg-eng)  — the SAME solve reached through route=None with
+                       ``SODMConfig.engine="dsvrg"`` (the registry's
+                       resolve policy honoring the engine pin; validates
+                       the dispatch equivalence)
+  * SODM(dual-cd)    — ``route="sodm"`` with engine="scalar" (an explicit
+                       engine is never auto-rerouted) — the accuracy
+                       oracle the dsvrg rows must match
+  * Ca-ODM / DiP-ODM / DC-ODM — Section 4 baselines via their routes
 
 ``datasets``/``scale_factor`` let the CI smoke tier execute the full
 script path on one tiny data set (tests/test_benchmarks_smoke.py pins the
@@ -17,11 +18,13 @@ dsvrg-engine row within 0.5 accuracy points of the dual-CD row there).
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
+import dataclasses
 
-from benchmarks.common import timed
-from repro.core import baselines, dsvrg, kernel_fns as kf, odm, sodm
+import jax
+
+from benchmarks.common import train
+from repro.api import ProblemSpec
+from repro.core import dsvrg, kernel_fns as kf, odm, sodm
 from repro.data import synthetic
 
 DATASETS = ["svmguide1", "phishing", "a7a", "cod-rna", "ijcnn1",
@@ -37,7 +40,12 @@ DSVRG_CFG = dsvrg.DSVRGConfig(n_partitions=8, epochs=6, batch=16)
 def run(out, datasets=None, scale_factor: float = 1.0):
     out.append("# table3_linear: dataset,method,acc,seconds")
     datasets = DATASETS if datasets is None else datasets
-    spec = kf.KernelSpec(name="linear")
+    problem = ProblemSpec(kernel=kf.KernelSpec(name="linear"),
+                          params=PARAMS)
+    # dual-CD oracle config: an explicitly named engine is never
+    # auto-rerouted, so large sets stay on the level loop too
+    ocfg = sodm.SODMConfig(p=2, levels=3, n_landmarks=8, tol=1e-4,
+                           max_sweeps=150, engine="scalar")
     for name in datasets:
         ds = synthetic.load(name, scale=SCALE[name] * scale_factor,
                             max_d=256)
@@ -46,46 +54,23 @@ def run(out, datasets=None, scale_factor: float = 1.0):
         key = jax.random.PRNGKey(0)
         results = {}
 
-        t, res = timed(lambda: dsvrg.solve(x, y, PARAMS, DSVRG_CFG, key),
-                       warmup=0)
-        acc = float(odm.accuracy(ds.y_test, jnp.sign(ds.x_test @ res.w)))
-        results["SODM(dsvrg)"] = (acc, t)
+        def row(label, **kw):
+            model, rep = train(problem, x, y, key=key, **kw)
+            acc = float(odm.accuracy(ds.y_test, model.predict(ds.x_test)))
+            results[label] = (acc, rep.wall_clock)
 
-        # the same Algorithm 2 solve reached through the engine route
-        ecfg = sodm.SODMConfig(engine="dsvrg", dsvrg=DSVRG_CFG)
-        t, eres = timed(lambda: sodm.solve(spec, x, y, PARAMS, ecfg, key),
-                        warmup=0)
-        acc = float(odm.accuracy(
-            ds.y_test, sodm.predict(spec, eres, x, y, ds.x_test)))
-        results["SODM(dsvrg-eng)"] = (acc, t)
-
-        # dual-CD oracle row: an explicitly named engine is never
-        # auto-rerouted, so large sets stay on the level loop too
-        ocfg = sodm.SODMConfig(p=2, levels=3, n_landmarks=8, tol=1e-4,
-                               max_sweeps=150, engine="scalar")
-        t, ores = timed(lambda: sodm.solve(spec, x, y, PARAMS, ocfg, key),
-                        warmup=0)
-        acc = float(odm.accuracy(
-            ds.y_test, sodm.predict(spec, ores, x, y, ds.x_test)))
-        results["SODM(dual-cd)"] = (acc, t)
-
-        t, cres = timed(lambda: baselines.cascade_solve(
-            spec, x, y, PARAMS, levels=3, key=key), warmup=0)
-        acc = float(odm.accuracy(
-            ds.y_test, baselines.cascade_predict(spec, cres, ds.x_test)))
-        results["Ca-ODM"] = (acc, t)
-
-        t, dres = timed(lambda: baselines.dip_solve(
-            spec, x, y, PARAMS, ocfg, key), warmup=0)
-        acc = float(odm.accuracy(
-            ds.y_test, sodm.predict(spec, dres, x, y, ds.x_test)))
-        results["DiP-ODM"] = (acc, t)
-
-        t, dcres = timed(lambda: baselines.dc_solve(
-            spec, x, y, PARAMS, ocfg, key), warmup=0)
-        acc = float(odm.accuracy(
-            ds.y_test, sodm.predict(spec, dcres, x, y, ds.x_test)))
-        results["DC-ODM"] = (acc, t)
+        row("SODM(dsvrg)", route="dsvrg",
+            cfg=sodm.SODMConfig(dsvrg=DSVRG_CFG))
+        # the same Algorithm 2 solve reached through the auto resolve
+        # policy honoring the engine pin
+        row("SODM(dsvrg-eng)",
+            cfg=sodm.SODMConfig(engine="dsvrg", dsvrg=DSVRG_CFG))
+        row("SODM(dual-cd)", route="sodm", cfg=ocfg)
+        # cascade keeps its historical sweep cap (cascade_solve's default)
+        row("Ca-ODM", route="cascade",
+            cfg=dataclasses.replace(ocfg, max_sweeps=100))
+        row("DiP-ODM", route="dip", cfg=ocfg)
+        row("DC-ODM", route="dc", cfg=ocfg)
 
         for m, (a, t) in results.items():
             out.append(f"table3,{name},{m},{a:.4f},{t:.2f}")

@@ -18,9 +18,9 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro import serve
+from repro.api import ODMEstimator, ProblemSpec
 from repro.core import kernel_fns as kf, odm, sodm
 from repro.data import synthetic
 
@@ -40,16 +40,18 @@ def main():
     ds = synthetic.load("svmguide1", scale=args.scale, max_d=64)
     M = ds.x_train.shape[0] - ds.x_train.shape[0] % 8
     x, y = ds.x_train[:M], ds.y_train[:M]
-    spec = kf.KernelSpec(name="rbf", gamma=kf.median_gamma(x))
-    params = odm.ODMParams(lam=100.0, theta=0.1, ups=0.5)
+    problem = ProblemSpec(
+        kernel=kf.KernelSpec(name="rbf", gamma=kf.median_gamma(x)),
+        params=odm.ODMParams(lam=100.0, theta=0.1, ups=0.5))
     cfg = sodm.SODMConfig(p=2, levels=3, n_landmarks=8, tol=1e-4,
                           max_sweeps=200)
 
-    # 1. fit + compile (the permutation gather and SV packing happen once)
-    t0 = time.time()
-    res, model = sodm.fit(spec, x, y, params, cfg, jax.random.PRNGKey(0))
+    # 1. fit + compile through the unified API (the permutation gather
+    # and SV packing happen once; training output IS the artifact)
+    est = ODMEstimator(problem, route="sodm", cfg=cfg)
+    model, report = est.fit(x, y, jax.random.PRNGKey(0))
     print(f"[fit] M={M} -> {model.n_sv} SVs ({model.compression}) "
-          f"in {time.time() - t0:.1f}s")
+          f"in {report.wall_clock:.1f}s  [{report.summary()}]")
 
     # 2. compress to the landmark budget within the accuracy target
     comp = serve.compress(model, args.budget, target=args.target)

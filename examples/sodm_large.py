@@ -1,12 +1,19 @@
-"""End-to-end SODM driver: the paper's training pipeline with the full
-production runtime — stratified partitioning, level-parallel solves
-dispatched through the speculative straggler scheduler, per-level
-checkpointing, and restart.
+"""End-to-end SODM driver: the paper's training pipeline at scale.
 
-    PYTHONPATH=src python examples/sodm_large.py [--resume]
+    PYTHONPATH=src python examples/sodm_large.py [--engine pallas]
+    PYTHONPATH=src python examples/sodm_large.py --handloop [--resume]
 
 This is the 'train a model for real' driver of deliverable (b): a scaled
 stand-in for SUSY (the paper's 5M-row set) sized for this container.
+
+Default path: train through the unified API (``repro.api.ODMEstimator``)
+— route resolution, validation, per-level checkpointing via the
+``level_callback`` fit hook, and a served artifact out the other end.
+
+``--handloop`` keeps the hand-rolled production-runtime demo: stratified
+partitioning, level-parallel solves dispatched through the speculative
+straggler scheduler, per-level checkpointing, and ``--resume`` restart —
+the subsystems the estimator hides.
 """
 import argparse
 import time
@@ -14,6 +21,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.api import ODMEstimator, ProblemSpec
 from repro.core import dual_cd, kernel_fns as kf, odm, partition, sodm
 from repro.data import synthetic
 from repro.distributed.checkpoint import CheckpointManager
@@ -22,14 +30,23 @@ from repro.distributed.straggler import SpecConfig, SpeculativeScheduler
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--resume", action="store_true",
+                    help="restart from the latest checkpoint (--handloop)")
+    ap.add_argument("--handloop", action="store_true",
+                    help="hand-rolled level loop with the speculative "
+                         "straggler scheduler instead of the estimator")
     ap.add_argument("--ckpt-dir", default="/tmp/sodm_large_ckpt")
     ap.add_argument("--scale", type=float, default=0.002)   # of 5M rows
     ap.add_argument("--engine", default="scalar",
-                    choices=("scalar", "pallas"),
-                    help="local solver: paper-faithful scalar CD or the "
-                         "Pallas greedy block-CD tile kernel")
+                    choices=("scalar", "block", "pallas"),
+                    help="local solver: paper-faithful scalar CD, the jnp "
+                         "block oracle, or the Pallas greedy block-CD "
+                         "tile kernel")
     args = ap.parse_args()
+    if args.handloop and args.engine == "block":
+        ap.error("--handloop dispatches per-partition solves (scalar | "
+                 "pallas); the block engine is a level solver — drop "
+                 "--handloop to use it")
 
     ds = synthetic.load("SUSY", scale=args.scale)
     M = ds.x_train.shape[0] - ds.x_train.shape[0] % 32
@@ -39,8 +56,36 @@ def main():
     spec = kf.KernelSpec(name="rbf", gamma=kf.median_gamma(x))
     params = odm.ODMParams(lam=100.0, theta=0.1, ups=0.5)
     p_factor, levels = 2, 5            # 32 partitions
-    K = p_factor ** levels
 
+    if args.handloop:
+        return handloop(args, spec, x, y, params, p_factor, levels, ds)
+
+    # --- the front door -------------------------------------------------
+    mgr = CheckpointManager(args.ckpt_dir, keep=2)
+    est = ODMEstimator(
+        ProblemSpec(kernel=spec, params=params),
+        route="sodm",
+        cfg=sodm.SODMConfig(p=p_factor, levels=levels, n_landmarks=8,
+                            tol=1e-4, max_sweeps=150, engine=args.engine))
+
+    def checkpoint_level(level, alphas):
+        # same fault-tolerance contract as the hand loop: every finished
+        # level is an atomic versioned restart point
+        mgr.save(levels - level + 1, alphas,
+                 {"level": level, "n_partitions": int(alphas.shape[0])})
+
+    t0 = time.time()
+    model, report = est.fit(x, y, jax.random.PRNGKey(0),
+                            level_callback=checkpoint_level)
+    print(report.summary())
+    print(f"trained + compiled {model.n_sv} SVs in {time.time() - t0:.1f}s")
+    print(f"final test accuracy: {est.score(ds.x_test, ds.y_test):.4f}")
+
+
+def handloop(args, spec, x, y, params, p_factor, levels, ds):
+    """The PR 1-era production runtime, kept as the subsystem demo."""
+    M = x.shape[0]
+    K = p_factor ** levels
     mgr = CheckpointManager(args.ckpt_dir, keep=2)
     sched = SpeculativeScheduler(SpecConfig(max_workers=8))
 

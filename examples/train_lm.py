@@ -54,8 +54,9 @@ def main():
 
     if args.odm_head:
         # integration point: ODM margin-distribution classifier on pooled
-        # features, trained by the SODM partitioned solver
-        from repro.core import kernel_fns as kf, odm, sodm
+        # features, trained through the unified API
+        from repro.api import ODMEstimator, ProblemSpec
+        from repro.core import sodm
         print("fitting ODM head on pooled hidden states...")
         B, S, n = 8, args.seq_len, 32
         feats, labels = [], []
@@ -70,13 +71,11 @@ def main():
         yf = jnp.concatenate(labels).astype(jnp.float32)
         Mn = xf.shape[0] - xf.shape[0] % 8
         xf, yf = xf[:Mn], yf[:Mn]
-        spec = kf.KernelSpec(name="rbf", gamma=0.5)
-        res = sodm.solve(spec, xf, yf, odm.ODMParams(lam=10.0),
-                         sodm.SODMConfig(p=2, levels=2, n_landmarks=4),
-                         jax.random.PRNGKey(1))
-        pred = sodm.predict(spec, res, xf, yf, xf)
-        print(f"ODM head train accuracy: "
-              f"{float(odm.accuracy(yf, pred)):.3f}")
+        est = ODMEstimator(
+            ProblemSpec.create("rbf", gamma=0.5, lam=10.0),
+            cfg=sodm.SODMConfig(p=2, levels=2, n_landmarks=4))
+        est.fit(xf, yf, jax.random.PRNGKey(1))
+        print(f"ODM head train accuracy: {est.score(xf, yf):.3f}")
 
 
 if __name__ == "__main__":

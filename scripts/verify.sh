@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# The ROADMAP verify commands as executable one-liners.
+#
+#   scripts/verify.sh          # fast tier (skips the multi-minute SPMD
+#                              # battery and other slow suites)
+#   scripts/verify.sh tier1    # full tier-1 suite
+#
+# Markers are registered in pytest.ini; tests/conftest.py also prepends
+# src/ to sys.path, but exporting PYTHONPATH here keeps subprocess-based
+# tests (the SPMD battery) working too.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+case "${1:-fast}" in
+  fast)  exec python -m pytest -x -q -m "not slow" ;;
+  tier1) exec python -m pytest -x -q ;;
+  *) echo "usage: $0 [fast|tier1]" >&2; exit 2 ;;
+esac

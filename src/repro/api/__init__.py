@@ -1,0 +1,25 @@
+"""repro.api — the unified front door over every training route.
+
+    from repro.api import ODMEstimator, ProblemSpec
+
+    est = ODMEstimator(ProblemSpec.create("rbf", gamma=0.5, lam=100.0))
+    model, report = est.fit(x, y, key)        # always a servable artifact
+    acc = est.score(x_test, y_test)
+
+Pieces (each module's docstring has the full story):
+
+* :class:`ProblemSpec` — kernel + hyperparameters, eagerly validated.
+* :mod:`repro.api.registry` — capability-based solver registry; one
+  ``resolve`` policy replaces the ad-hoc per-module dispatch.
+* :class:`ODMEstimator` — fit / predict / score / save / load facade.
+* :class:`FitReport` — the uniform training report (route, engine,
+  history, passes, eta, SV count, wall-clock; native result in ``raw``).
+"""
+from repro.api import registry
+from repro.api.estimator import ODMEstimator
+from repro.api.registry import SolverEntry, resolve
+from repro.api.report import FitReport
+from repro.api.spec import ProblemSpec
+
+__all__ = ["ODMEstimator", "ProblemSpec", "FitReport", "SolverEntry",
+           "registry", "resolve"]

@@ -1,0 +1,158 @@
+"""``ODMEstimator`` — the one front door for training and serving ODMs.
+
+    est = ODMEstimator(ProblemSpec.create("rbf", gamma=0.5, lam=100.0))
+    model, report = est.fit(x, y, jax.random.PRNGKey(0))
+    est.predict(x_test)              # or model.predict(...)
+    est.save("/tmp/model"); ODMEstimator.load("/tmp/model")
+
+One estimator covers every training route in the solver registry
+(:mod:`repro.api.registry`): the paper's two regimes (Alg. 1 partitioned
+dual solves, Alg. 2 linear-kernel DSVRG) and the Section-4 baselines.
+``fit`` validates the data once (:meth:`ProblemSpec.validate`), resolves
+the route (explicit ``route=`` always wins; otherwise the registry's auto
+policy — the paper's linear-kernel dispatch), runs it, and ALWAYS returns
+a deployable :class:`repro.serve.model.FittedODM` plus a uniform
+:class:`repro.api.report.FitReport` — fixing the old asymmetry where only
+``sodm.fit`` compiled an artifact and every other route handed back raw
+solver state.
+
+Persistence delegates to the serving subsystem: :meth:`save` writes the
+compiled artifact through ``CheckpointManager`` (atomic, versioned) and
+:meth:`load` restores an estimator that scores without refitting.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.api import registry
+from repro.api.report import FitReport
+from repro.api.spec import ProblemSpec
+from repro.core import kernel_fns as kf
+from repro.core import odm as odm_mod
+from repro.core.sodm import SODMConfig
+from repro.serve import model as serve_model
+
+Array = jax.Array
+
+
+class ODMEstimator:
+    """Facade over the solver registry with sklearn-flavored verbs.
+
+    Parameters
+    ----------
+    problem: what to solve — a :class:`ProblemSpec` (a bare ``KernelSpec``
+        is accepted and wrapped with default ``ODMParams``); ``None``
+        means the default rbf problem.
+    route: registry route name, or ``None`` for the auto policy
+        (:func:`repro.api.registry.resolve`). Unknown names fail HERE,
+        not at fit time.
+    cfg: one ``SODMConfig`` configures every route — the hierarchical
+        routes read p/levels/tol/engine/..., the gradient routes read
+        ``cfg.dsvrg`` (epochs/batch/eta/coreset_frac), cascade reads
+        levels/tol/max_sweeps.
+    mesh / data_axis: SPMD placement for the mesh-aware routes.
+    prune_tol / budget / target: artifact compression knobs forwarded to
+        ``serve.compile_model`` (SV pruning + Nyström landmark budget).
+    """
+
+    def __init__(self, problem: ProblemSpec | kf.KernelSpec | None = None,
+                 *, route: str | None = None,
+                 cfg: SODMConfig | None = None,
+                 mesh: jax.sharding.Mesh | None = None,
+                 data_axis: str = "data", prune_tol: float = 0.0,
+                 budget: int | None = None, target: float | None = None):
+        if problem is None:
+            problem = ProblemSpec()
+        elif isinstance(problem, kf.KernelSpec):
+            problem = ProblemSpec(kernel=problem)
+        self.problem = problem
+        if route is not None:
+            registry.get(route)            # unknown route: fail eagerly
+        self.route = route
+        self.cfg = cfg if cfg is not None else SODMConfig()
+        self.mesh = mesh
+        self.data_axis = data_axis
+        self.compile_kw = {"prune_tol": prune_tol, "budget": budget,
+                           "target": target}
+        self.model_: serve_model.FittedODM | None = None
+        self.report_: FitReport | None = None
+
+    # -- training -----------------------------------------------------------
+
+    def fit(self, x: Array, y: Array, key: jax.Array | None = None,
+            **fit_kw) -> tuple[serve_model.FittedODM, FitReport]:
+        """Train through the resolved route; returns (artifact, report).
+
+        ``fit_kw`` forwards route-specific hooks (currently
+        ``level_callback`` for the single-process sodm route's per-level
+        checkpointing; routes ignore hooks they have no seam for).
+        """
+        x, y = self.problem.validate(x, y)
+        key = jax.random.PRNGKey(0) if key is None else key
+        M = int(x.shape[0])
+        entry = registry.resolve(self.problem, M, mesh=self.mesh,
+                                 route=self.route, cfg=self.cfg)
+        # the schedule-upgrade rule only applies to AUTO dsvrg dispatch
+        # (an explicit choice keeps whatever cfg.dsvrg says)
+        auto = (entry.name == "dsvrg" and self.route is None
+                and self.cfg.engine != "dsvrg")
+        t0 = time.perf_counter()
+        out = entry.fit(self.problem, x, y, key, cfg=self.cfg,
+                        mesh=self.mesh, data_axis=self.data_axis,
+                        auto=auto, compile_kw=dict(self.compile_kw),
+                        fit_kw=fit_kw)
+        jax.block_until_ready(
+            out.model.w if out.model.w is not None else out.model.coef)
+        wall = time.perf_counter() - t0
+        report = FitReport(
+            route=entry.name, engine=out.engine, algorithm=entry.algorithm,
+            n_train=M, n_sv=out.model.n_sv,
+            compression=out.model.compression, wall_clock=wall,
+            passes=out.passes, kkt=out.kkt, eta=out.eta,
+            history=out.history, gap=out.model.gap, raw=out.raw)
+        self.model_, self.report_ = out.model, report
+        return out.model, report
+
+    # -- scoring ------------------------------------------------------------
+
+    def _fitted(self) -> serve_model.FittedODM:
+        if self.model_ is None:
+            raise ValueError(
+                "this ODMEstimator is not fitted — call fit(x, y) first "
+                "(or load() a saved artifact)")
+        return self.model_
+
+    def decision_function(self, x: Array, **kw) -> Array:
+        """f(x) (T,) through the served scoring path."""
+        return self._fitted().decision_function(x, **kw)
+
+    def predict(self, x: Array, **kw) -> Array:
+        """sign(f(x)) in {-1, +1}."""
+        return self._fitted().predict(x, **kw)
+
+    def score(self, x: Array, y: Array) -> float:
+        """Accuracy of :meth:`predict` against ±1 labels."""
+        return float(odm_mod.accuracy(y, self.predict(x)))
+
+    # -- persistence --------------------------------------------------------
+
+    def save(self, directory: str) -> str:
+        """Persist the fitted artifact (atomic versioned checkpoint)."""
+        return self._fitted().save(directory)
+
+    @classmethod
+    def load(cls, directory: str, *,
+             problem: ProblemSpec | None = None) -> "ODMEstimator":
+        """Restore an estimator that scores immediately (no refit).
+
+        The artifact stores the kernel spec but not the training
+        hyperparameters; pass ``problem`` to set them for a later refit,
+        otherwise defaults are assumed.
+        """
+        model = serve_model.load_model(directory)
+        est = cls(problem if problem is not None
+                  else ProblemSpec(kernel=model.spec))
+        est.model_ = model
+        return est

@@ -1,0 +1,56 @@
+"""``FitReport`` — the uniform training report every route returns.
+
+Before the unified API each route returned its own grab-bag
+(``SODMResult`` with sweeps/KKT, ``DSVRGResult`` with history/eta,
+``CascadeResult`` with a survivor slab, bare ``GradResult`` tuples), so
+benchmarks and examples each re-derived "what happened" differently.
+``FitReport`` is the one shape: route chosen, engine used, objective
+history, pass/epoch counts, step size where applicable, SV count,
+wall-clock. The route's native result survives untouched in ``raw`` for
+consumers that need route-specific fields (e.g. ``SODMResult.perm``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class FitReport:
+    """What one ``ODMEstimator.fit`` did, uniformly across routes.
+
+    ``passes`` is the route's native progress counter — CD sweeps per
+    level for the sodm/dip/dc level loops (one entry per level, coarsest
+    last), ``(epochs,)`` for the gradient routes, and ``(levels_run,)``
+    for the cascade funnel (its result reports no per-level sweep
+    counts). ``history`` / ``eta`` are ``None`` where the route has no
+    objective trace / step size (the dual-CD level loop tracks a KKT
+    residual instead — ``kkt``).
+    """
+
+    route: str                            # registry route that trained
+    engine: str                           # solver engine underneath
+    algorithm: str                        # paper algorithm it implements
+    n_train: int                          # instances trained on
+    n_sv: int                             # SVs in the compiled artifact
+    compression: str                      # FittedODM.compression
+    wall_clock: float                     # fit seconds (solve + compile)
+    passes: tuple[int, ...] = ()          # sweeps per level / (epochs,)
+    kkt: float | None = None              # final KKT residual (dual routes)
+    eta: float | None = None              # step size used (gradient routes)
+    history: tuple[float, ...] | None = None   # per-epoch objective
+    gap: float = 0.0                      # compile-time decision gap
+    raw: object = None                    # the route's native result
+
+    def summary(self) -> str:
+        """One readable line for logs and examples."""
+        bits = [f"route={self.route}", f"engine={self.engine}",
+                f"M={self.n_train}", f"sv={self.n_sv}",
+                f"passes={list(self.passes)}"]
+        if self.kkt is not None:
+            bits.append(f"kkt={self.kkt:.2e}")
+        if self.eta is not None:
+            bits.append(f"eta={self.eta:.4g}")
+        if self.history:
+            bits.append(f"obj={self.history[-1]:.5f}")
+        bits.append(f"{self.wall_clock:.2f}s")
+        return "FitReport(" + " ".join(bits) + ")"

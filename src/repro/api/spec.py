@@ -1,0 +1,98 @@
+"""``ProblemSpec`` — the one validated description of an ODM problem.
+
+Every training route needs the same two things: the kernel
+(:class:`repro.core.kernel_fns.KernelSpec`) and the ODM hyperparameters
+(:class:`repro.core.odm.ODMParams`). Before the unified API each route
+re-validated them independently (or not at all — a mislabeled ``y``
+reached the solver and produced a silently wrong model). ``ProblemSpec``
+fuses both into one frozen object with EAGER validation:
+
+* hyperparameter sanity at construction (``__post_init__``): kernel name
+  registered, positive bandwidth/degree where the family uses them,
+  ``lam``/``ups`` positive, ``theta`` in [0, 1) — the dual constant
+  c = (1-theta)^2/(lam·ups) must exist and be positive;
+* data checks at :meth:`validate` (called once by
+  ``ODMEstimator.fit``): 2-D features, 1-D labels of matching length,
+  labels exactly ±1 (the dual layout [zeta; beta] and every margin
+  formula assume it), labels cast to the feature dtype.
+
+Kernel-family × solver compatibility is the *registry's* half of
+validation (:func:`repro.api.registry.resolve`) — a spec only says what
+the problem IS, the registry says who can solve it.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kernel_fns as kf
+from repro.core.odm import ODMParams
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ProblemSpec:
+    """A validated (kernel, hyperparameters) pair. Hashable and static —
+    safe to close over in jitted code, like its two components."""
+
+    kernel: kf.KernelSpec = kf.KernelSpec()
+    params: ODMParams = ODMParams()
+
+    def __post_init__(self):
+        k, p = self.kernel, self.params
+        if k.name not in kf.KERNELS:
+            raise ValueError(
+                f"kernel must be one of {kf.KERNELS}, got {k.name!r}")
+        if k.name in ("rbf", "laplacian", "poly") and not k.gamma > 0.0:
+            raise ValueError(
+                f"kernel {k.name!r} needs gamma > 0, got {k.gamma}")
+        if k.name == "poly" and k.degree < 1:
+            raise ValueError(f"poly degree must be >= 1, got {k.degree}")
+        if not p.lam > 0.0:
+            raise ValueError(f"lam must be > 0, got {p.lam}")
+        if not p.ups > 0.0:
+            raise ValueError(f"ups must be > 0, got {p.ups}")
+        if not 0.0 <= p.theta < 1.0:
+            raise ValueError(
+                f"theta must be in [0, 1) (c = (1-theta)^2/(lam*ups) "
+                f"degenerates at 1), got {p.theta}")
+
+    @classmethod
+    def create(cls, kernel: str = "rbf", *, gamma: float = 1.0,
+               degree: int = 3, coef0: float = 1.0, lam: float = 1.0,
+               theta: float = 0.1, ups: float = 0.5) -> "ProblemSpec":
+        """Flat-kwargs convenience constructor (quickstart-friendly)."""
+        return cls(kernel=kf.KernelSpec(name=kernel, gamma=gamma,
+                                        degree=degree, coef0=coef0),
+                   params=ODMParams(lam=lam, theta=theta, ups=ups))
+
+    # -- data validation ----------------------------------------------------
+
+    def validate(self, x: Array, y: Array) -> tuple[Array, Array]:
+        """Shape/label checks every route used to re-do (or skip).
+
+        Returns ``(x, y)`` as jnp arrays with ``y`` cast to ``x``'s dtype
+        (integer ±1 labels are accepted and converted). Raises
+        ``ValueError`` with the offending shape/count otherwise.
+        """
+        x = jnp.asarray(x)
+        y = jnp.asarray(y)
+        if x.ndim != 2:
+            raise ValueError(f"x must be (M, d), got shape {x.shape}")
+        if y.ndim != 1:
+            raise ValueError(f"y must be (M,), got shape {y.shape}")
+        if x.shape[0] != y.shape[0]:
+            raise ValueError(
+                f"x and y disagree on M: {x.shape[0]} vs {y.shape[0]}")
+        if x.shape[0] == 0:
+            raise ValueError("empty training set")
+        bad = int(jnp.sum(jnp.abs(y.astype(jnp.float32)) != 1.0))
+        if bad:
+            raise ValueError(
+                f"labels must be exactly +1/-1 (the dual layout and every "
+                f"margin formula assume it); {bad} of {y.shape[0]} rows "
+                f"are not")
+        return x, y.astype(x.dtype)

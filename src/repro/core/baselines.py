@@ -35,6 +35,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import deprecation as _dep
 from repro.core import dual_cd, kernel_fns as kf
 from repro.core import partition as part_mod
 from repro.core import sodm as sodm_mod
@@ -42,6 +43,11 @@ from repro.core.odm import (ODMParams, minibatch_grad, primal_grad,
                             primal_objective)
 
 Array = jax.Array
+
+# Every public *_solve here is a legacy entry point: the supported way to
+# train a baseline is the unified API (repro.api.ODMEstimator with
+# route="cascade" | "dip" | "dc" | "svrg" | "csvrg"). The shims warn once
+# and delegate to the _-prefixed implementations the registry calls.
 
 
 # ---------------------------------------------------------------------------
@@ -73,7 +79,17 @@ def cascade_solve(spec: kf.KernelSpec, x: Array, y: Array, params: ODMParams,
                   levels: int, key: jax.Array, tol: float = 1e-4,
                   max_sweeps: int = 100) -> CascadeResult:
     """Binary cascade: 2^levels leaves; each merge keeps half the instances
-    (the classic cascade funnel), solving on survivors only."""
+    (the classic cascade funnel), solving on survivors only. Legacy entry
+    point (see module note)."""
+    _dep.warn_once("repro.core.baselines.cascade_solve",
+                   "repro.api.ODMEstimator(route='cascade').fit")
+    return _cascade_solve(spec, x, y, params, levels, key, tol, max_sweeps)
+
+
+def _cascade_solve(spec: kf.KernelSpec, x: Array, y: Array,
+                   params: ODMParams, levels: int, key: jax.Array,
+                   tol: float = 1e-4,
+                   max_sweeps: int = 100) -> CascadeResult:
     M = x.shape[0]
     K = 2 ** levels
     if M % K != 0:
@@ -131,11 +147,19 @@ def cascade_predict(spec: kf.KernelSpec, res: CascadeResult,
 
 def dip_solve(spec: kf.KernelSpec, x: Array, y: Array, params: ODMParams,
               cfg: sodm_mod.SODMConfig, key: jax.Array) -> sodm_mod.SODMResult:
-    """DiP: k-means clusters dealt round-robin across partitions.
+    """DiP: k-means clusters dealt round-robin across partitions. Legacy
+    entry point (see module note)."""
+    _dep.warn_once("repro.core.baselines.dip_solve",
+                   "repro.api.ODMEstimator(route='dip').fit")
+    return _dip_solve(spec, x, y, params, cfg, key)
 
-    Reuses the stratified sampler with *k-means clusters as the strata* —
-    the structural difference from SODM is the stratum construction (input-
-    space centroids vs RKHS det-max landmarks)."""
+
+def _dip_solve(spec: kf.KernelSpec, x: Array, y: Array, params: ODMParams,
+               cfg: sodm_mod.SODMConfig,
+               key: jax.Array) -> sodm_mod.SODMResult:
+    """Reuses the stratified sampler with *k-means clusters as the strata*
+    — the structural difference from SODM is the stratum construction
+    (input-space centroids vs RKHS det-max landmarks)."""
     M = x.shape[0]
     K0 = cfg.p ** cfg.levels
     ck, pk = jax.random.split(key)
@@ -146,7 +170,7 @@ def dip_solve(spec: kf.KernelSpec, x: Array, y: Array, params: ODMParams,
         jnp.arange(M, dtype=jnp.int32) // (M // cfg.n_landmarks))
     perm = part_mod.stratified_partitions(stratum, K0, pk)
     xp, yp = x[perm], y[perm]
-    res = sodm_mod.solve(
+    res = sodm_mod._solve(
         spec, xp, yp, params,
         dataclasses.replace(cfg, partition_strategy="identity"), pk)
     # compose permutations (solve() used identity internally)
@@ -158,8 +182,17 @@ def dip_solve(spec: kf.KernelSpec, x: Array, y: Array, params: ODMParams,
 
 def dc_solve(spec: kf.KernelSpec, x: Array, y: Array, params: ODMParams,
              cfg: sodm_mod.SODMConfig, key: jax.Array) -> sodm_mod.SODMResult:
-    """DC: clusters *are* partitions (cluster_partitions layout)."""
-    return sodm_mod.solve(
+    """DC: clusters *are* partitions (cluster_partitions layout). Legacy
+    entry point (see module note)."""
+    _dep.warn_once("repro.core.baselines.dc_solve",
+                   "repro.api.ODMEstimator(route='dc').fit")
+    return _dc_solve(spec, x, y, params, cfg, key)
+
+
+def _dc_solve(spec: kf.KernelSpec, x: Array, y: Array, params: ODMParams,
+              cfg: sodm_mod.SODMConfig,
+              key: jax.Array) -> sodm_mod.SODMResult:
+    return sodm_mod._solve(
         spec, x, y, params,
         dataclasses.replace(cfg, partition_strategy="cluster"), key)
 
@@ -175,7 +208,15 @@ class GradResult(NamedTuple):
 
 def svrg_solve(x: Array, y: Array, params: ODMParams, epochs: int,
                eta: float, key: jax.Array, batch: int = 1) -> GradResult:
-    """Plain single-machine SVRG (Johnson & Zhang 2013)."""
+    """Plain single-machine SVRG (Johnson & Zhang 2013). Legacy entry
+    point (see module note)."""
+    _dep.warn_once("repro.core.baselines.svrg_solve",
+                   "repro.api.ODMEstimator(route='svrg').fit")
+    return _svrg_solve(x, y, params, epochs, eta, key, batch)
+
+
+def _svrg_solve(x: Array, y: Array, params: ODMParams, epochs: int,
+                eta: float, key: jax.Array, batch: int = 1) -> GradResult:
     M, d = x.shape
     steps = M // batch
 
@@ -223,7 +264,16 @@ def kcenter_coreset(x: Array, n: int) -> Array:
 def csvrg_solve(x: Array, y: Array, params: ODMParams, epochs: int,
                 eta: float, key: jax.Array, coreset_frac: float = 0.1,
                 batch: int = 1) -> GradResult:
-    """Coreset-SVRG (Tan et al. 2019): anchor gradient on a k-center coreset."""
+    """Coreset-SVRG (Tan et al. 2019): anchor gradient on a k-center
+    coreset. Legacy entry point (see module note)."""
+    _dep.warn_once("repro.core.baselines.csvrg_solve",
+                   "repro.api.ODMEstimator(route='csvrg').fit")
+    return _csvrg_solve(x, y, params, epochs, eta, key, coreset_frac, batch)
+
+
+def _csvrg_solve(x: Array, y: Array, params: ODMParams, epochs: int,
+                 eta: float, key: jax.Array, coreset_frac: float = 0.1,
+                 batch: int = 1) -> GradResult:
     M, d = x.shape
     n_core = max(1, int(M * coreset_frac))
     core = kcenter_coreset(x, n_core)

@@ -1,0 +1,33 @@
+"""Warn-once shims for the legacy per-route training entry points.
+
+Since the unified API (``repro.api``), the supported way to train is the
+:class:`repro.api.ODMEstimator` facade backed by the capability-based
+solver registry (:mod:`repro.api.registry`). The historical entry points
+(``sodm.solve``/``solve_sharded``/``fit``, ``dsvrg.solve``/
+``solve_sharded``, ``baselines.*_solve``) keep working unchanged as thin
+shims: each warns ONCE per process, then delegates to the private
+implementation the registry routes call directly — so training through
+the facade never triggers a legacy warning.
+"""
+from __future__ import annotations
+
+import warnings
+
+_WARNED: set[str] = set()
+
+
+def warn_once(entry: str, replacement: str) -> None:
+    """Emit one ``FutureWarning`` per process for a legacy entry point."""
+    if entry in _WARNED:
+        return
+    _WARNED.add(entry)
+    warnings.warn(
+        f"{entry} is a legacy entry point kept for back-compat (it "
+        f"delegates unchanged); new code should train through "
+        f"{replacement} — the repro.api facade over the solver registry.",
+        FutureWarning, stacklevel=3)
+
+
+def reset() -> None:
+    """Forget which entries have warned (test hook)."""
+    _WARNED.clear()

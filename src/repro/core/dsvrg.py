@@ -77,6 +77,8 @@ class DSVRGConfig:
     fused: bool | None = None       # None: fused Pallas direction kernel when
     #                                 compiled (TPU), jnp reference under
     #                                 interpret mode / CPU
+    coreset_frac: float = 0.1       # anchor-coreset fraction of the csvrg
+    #                                 baseline route (ignored elsewhere)
 
 
 def auto_eta(x: Array, params: ODMParams, frac: float = 0.5) -> float:
@@ -265,7 +267,17 @@ def _run(w0: Array, xs: Array, ys: Array, wts: Array, *, params: ODMParams,
 
 def solve(x: Array, y: Array, params: ODMParams, cfg: DSVRGConfig,
           key: jax.Array, w0: Array | None = None) -> DSVRGResult:
-    """Single-process DSVRG (Algorithm 2)."""
+    """Single-process DSVRG (Algorithm 2) — legacy entry point; the
+    supported front door is ``repro.api.ODMEstimator`` with
+    ``route="dsvrg"`` (this shim warns once and delegates unchanged)."""
+    from repro.core import deprecation as _dep
+    _dep.warn_once("repro.core.dsvrg.solve",
+                   "repro.api.ODMEstimator(route='dsvrg').fit")
+    return _solve(x, y, params, cfg, key, w0)
+
+
+def _solve(x: Array, y: Array, params: ODMParams, cfg: DSVRGConfig,
+           key: jax.Array, w0: Array | None = None) -> DSVRGResult:
     M, d = x.shape
     K = cfg.n_partitions
     if M % K != 0:
@@ -420,6 +432,19 @@ def solve_sharded(x: Array, y: Array, params: ODMParams, cfg: DSVRGConfig,
                   key: jax.Array, mesh: jax.sharding.Mesh,
                   data_axis: str = "data",
                   w0: Array | None = None) -> DSVRGResult:
+    """SPMD DSVRG — legacy entry point; the supported front door is
+    ``repro.api.ODMEstimator`` with ``route="dsvrg"`` and ``mesh=`` (this
+    shim warns once and delegates unchanged)."""
+    from repro.core import deprecation as _dep
+    _dep.warn_once("repro.core.dsvrg.solve_sharded",
+                   "repro.api.ODMEstimator(route='dsvrg').fit")
+    return _solve_sharded(x, y, params, cfg, key, mesh, data_axis, w0)
+
+
+def _solve_sharded(x: Array, y: Array, params: ODMParams, cfg: DSVRGConfig,
+                   key: jax.Array, mesh: jax.sharding.Mesh,
+                   data_axis: str = "data",
+                   w0: Array | None = None) -> DSVRGResult:
     M, d = x.shape
     K = cfg.n_partitions
     n_dev = mesh.shape[data_axis]

@@ -35,12 +35,15 @@ Three engines, selected by ``SODMConfig.engine``:
 A fourth engine name, ``"dsvrg"``, is NOT a level solver: it is the
 paper's "when linear kernel is applied" dispatch (Algorithm 2) to the
 communication-efficient primal SVRG solver (:mod:`repro.core.dsvrg`).
-``sodm.solve``/``solve_sharded`` test :func:`wants_dsvrg` BEFORE entering
-the level loop — explicitly via ``SODMConfig.engine = "dsvrg"`` (linear
-kernel required), or automatically for linear-kernel problems with
+The dispatch policy lives in the capability-based solver registry
+(:func:`repro.api.registry.resolve_auto`); ``sodm.solve``/
+``solve_sharded`` consult it BEFORE entering the level loop — explicitly
+via ``SODMConfig.engine = "dsvrg"`` (linear kernel required), or
+automatically for linear-kernel problems with
 M >= ``SODMConfig.dsvrg_threshold`` — and recover the dual alpha from the
 primal solution through ``odm.alpha_from_w``, so every dual-alpha consumer
 (predict / baselines / benchmarks) reaches it uniformly.
+:func:`wants_dsvrg` survives as the legacy boolean form of that policy.
 
 Engines are plain closures so they can be jitted by the caller with
 ``spec``/``params``/``tol``/``max_sweeps`` static and used unchanged
@@ -68,26 +71,22 @@ ENGINES = LEVEL_ENGINES + ("dsvrg",)
 
 def wants_dsvrg(engine: str | None, kernel_name: str, M: int,
                 threshold: int) -> bool:
-    """The paper's linear-kernel dispatch rule (Section 3.3).
+    """The paper's linear-kernel dispatch rule (Section 3.3) — LEGACY
+    predicate form.
 
-    True when the whole solve should route to the DSVRG primal engine
-    instead of the hierarchical dual level loop: either explicitly
-    (``engine == "dsvrg"``, linear kernel required — raises otherwise) or
-    automatically for a linear-kernel problem at/above ``threshold``
-    instances ("when linear kernel is applied, we extend a communication
-    efficient SVRG method"). The auto-dispatch only applies when the
-    engine is left UNSET (``None``, the ``SODMConfig`` default) — any
-    explicitly named engine, scalar included, is honored whatever the
-    problem size.
+    The policy itself now lives in the capability-based solver registry
+    (:func:`repro.api.registry.resolve_auto`, the single source every
+    route resolution goes through); this wrapper keeps the historical
+    boolean API: True when the whole solve should route to the DSVRG
+    primal engine — explicitly (``engine == "dsvrg"``, linear kernel
+    required, raises otherwise) or automatically for a linear-kernel
+    problem at/above ``threshold`` instances when the engine is left
+    UNSET (``None``); any explicitly named engine, scalar included, is
+    honored whatever the problem size.
     """
-    if engine == "dsvrg":
-        if kernel_name != "linear":
-            raise ValueError(
-                f"engine='dsvrg' is the paper's linear-kernel path; got "
-                f"kernel {kernel_name!r} — use scalar/block/pallas for "
-                f"nonlinear kernels")
-        return True
-    return engine is None and kernel_name == "linear" and M >= threshold
+    from repro.api import registry    # deferred: registry imports core
+    return registry.resolve_auto(kernel_name, M, engine=engine,
+                                 threshold=threshold).name == "dsvrg"
 
 # kernel names already warned about falling back to a materialized Q
 _MATERIALIZED_WARNED: set[str] = set()

@@ -66,7 +66,8 @@ run, so it is pluggable: ``SODMConfig.engine`` selects a
   AUTOMATICALLY — only when ``engine`` is left unset (None); an explicit
   scalar/block/pallas choice is always honored — for linear-kernel
   problems with M >= ``SODMConfig.dsvrg_threshold`` (the paper's "when
-  linear kernel is applied" dispatch); ``SODMConfig.dsvrg`` carries the
+  linear kernel is applied" dispatch, now owned by
+  ``repro.api.registry.resolve_auto``); ``SODMConfig.dsvrg`` carries the
   solver's own epochs/batch/schedule knobs.
 
 ``engine=None`` (the default) otherwise behaves exactly like
@@ -88,6 +89,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import deprecation as _dep
 from repro.core import dsvrg as dsvrg_mod
 from repro.core import engines, kernel_fns as kf
 from repro.core import odm as odm_mod
@@ -159,27 +161,19 @@ def split_to_partitions(alpha: Array, K: int) -> Array:
     return jnp.concatenate([zetas, betas], axis=1)
 
 
-def _dsvrg_partitions(M: int, want: int, n_dev: int = 1) -> int:
-    """Largest K <= want that divides M and is a multiple of n_dev."""
-    K = max(want - want % n_dev, n_dev)
-    while K >= n_dev:
-        if M % K == 0:
-            return K
-        K -= n_dev
-    raise ValueError(
-        f"no DSVRG partition count <= {want} divides M={M} and is a "
-        f"multiple of the data axis size {n_dev}")
-
-
 def _solve_dsvrg(spec: kf.KernelSpec, x: Array, y: Array, params: ODMParams,
                  cfg: SODMConfig, key: jax.Array,
                  mesh: jax.sharding.Mesh | None = None,
-                 data_axis: str = "data", auto: bool = False) -> SODMResult:
-    """Whole-problem linear-kernel route (see ``engines.wants_dsvrg``).
+                 data_axis: str = "data", auto: bool = False,
+                 ) -> tuple[SODMResult, dsvrg_mod.DSVRGResult]:
+    """Whole-problem linear-kernel route (the registry's dsvrg entry).
 
     Solves the primal with DSVRG (Algorithm 2) and recovers the dual via
-    ``odm.alpha_from_w`` so the result plugs into every alpha consumer.
-    ``levels_run`` is 1 (a single whole-problem solve),
+    ``odm.alpha_from_w`` so the result plugs into every alpha consumer;
+    the native ``DSVRGResult`` is returned alongside so the unified API
+    can report the objective history / eta and compile the artifact from
+    the primal ``w`` directly. ``levels_run`` is 1 (a single
+    whole-problem solve),
     ``sweeps_per_level`` reports the epoch count, and ``kkt`` is the
     primal gradient infinity norm (the natural stationarity residual of
     the primal path). The outer ``partition_strategy``/``n_landmarks``
@@ -194,9 +188,10 @@ def _solve_dsvrg(spec: kf.KernelSpec, x: Array, y: Array, params: ODMParams,
     the big-data regime that triggers the auto route. An explicit
     ``engine="dsvrg"`` keeps whatever ``cfg.dsvrg`` says.
     """
+    from repro.api import registry
     M = x.shape[0]
     n_dev = mesh.shape[data_axis] if mesh is not None else 1
-    K = _dsvrg_partitions(M, cfg.dsvrg.n_partitions, n_dev)
+    K = registry.dsvrg_partition_count(M, cfg.dsvrg.n_partitions, n_dev)
     dcfg = dataclasses.replace(cfg.dsvrg, n_partitions=K)
     if auto and mesh is not None:
         dcfg = dataclasses.replace(dcfg, schedule="parallel")
@@ -205,10 +200,10 @@ def _solve_dsvrg(spec: kf.KernelSpec, x: Array, y: Array, params: ODMParams,
             dcfg, partition_strategy=cfg.partition_strategy,
             n_landmarks=cfg.n_landmarks)
     if mesh is not None:
-        res = dsvrg_mod.solve_sharded(x, y, params, dcfg, key, mesh,
-                                      data_axis=data_axis)
+        res = dsvrg_mod._solve_sharded(x, y, params, dcfg, key, mesh,
+                                       data_axis=data_axis)
     else:
-        res = dsvrg_mod.solve(x, y, params, dcfg, key)
+        res = dsvrg_mod._solve(x, y, params, dcfg, key)
     xp, yp = x[res.perm], y[res.perm]
     alpha = odm_mod.alpha_from_w(res.w, xp, yp, params)
     # grad p(w) = w - w_from_alpha(alpha_from_w(w)) exactly (the recovered
@@ -216,19 +211,30 @@ def _solve_dsvrg(spec: kf.KernelSpec, x: Array, y: Array, params: ODMParams,
     # residual reuses the alpha pass instead of a second O(M·d) sweep
     kkt = jnp.max(jnp.abs(res.w - odm_mod.w_from_alpha(xp, yp, alpha)))
     return SODMResult(alpha=alpha, perm=res.perm, levels_run=1,
-                      sweeps_per_level=[dcfg.epochs], kkt=kkt)
+                      sweeps_per_level=[dcfg.epochs], kkt=kkt), res
 
 
 def solve(spec: kf.KernelSpec, x: Array, y: Array, params: ODMParams,
           cfg: SODMConfig, key: jax.Array,
           level_callback: Callable[[int, Array], None] | None = None,
           ) -> SODMResult:
-    """Single-process SODM (Algorithm 1); linear-kernel problems may route
-    to the DSVRG primal engine (Algorithm 2) — see ``engines.wants_dsvrg``
-    (``level_callback`` does not fire on that path: there are no levels)."""
+    """Single-process SODM (Algorithm 1) — legacy entry point; the
+    supported front door is ``repro.api.ODMEstimator`` (this shim warns
+    once and delegates unchanged). Linear-kernel problems may route to
+    the DSVRG primal engine (Algorithm 2) per the registry's dispatch
+    policy (``level_callback`` does not fire on that path: there are no
+    levels)."""
+    _dep.warn_once("repro.core.sodm.solve", "repro.api.ODMEstimator.fit")
+    return _solve(spec, x, y, params, cfg, key, level_callback)
+
+
+def _solve(spec: kf.KernelSpec, x: Array, y: Array, params: ODMParams,
+           cfg: SODMConfig, key: jax.Array,
+           level_callback: Callable[[int, Array], None] | None = None,
+           ) -> SODMResult:
     M = x.shape[0]
     if engines.wants_dsvrg(cfg.engine, spec.name, M, cfg.dsvrg_threshold):
-        return _solve_dsvrg(spec, x, y, params, cfg, key)
+        return _solve_dsvrg(spec, x, y, params, cfg, key)[0]
     K0 = cfg.p ** cfg.levels
     if M % K0 != 0:
         raise ValueError(f"p^L={K0} must divide M={M}")
@@ -299,7 +305,9 @@ def solve(spec: kf.KernelSpec, x: Array, y: Array, params: ODMParams,
 def solve_sharded(spec: kf.KernelSpec, x: Array, y: Array, params: ODMParams,
                   cfg: SODMConfig, key: jax.Array, mesh: jax.sharding.Mesh,
                   data_axis: str = "data") -> SODMResult:
-    """SODM with partitions sharded over ``mesh[data_axis]``.
+    """SODM with partitions sharded over ``mesh[data_axis]`` — legacy
+    entry point; the supported front door is ``repro.api.ODMEstimator``
+    with ``mesh=`` (this shim warns once and delegates unchanged).
 
     Preconditions: p^L partitions, n_dev = mesh.shape[data_axis], and
     p^L % n_dev == 0 (each device starts with an equal slab). Levels with
@@ -309,13 +317,23 @@ def solve_sharded(spec: kf.KernelSpec, x: Array, y: Array, params: ODMParams,
     is solved exactly once (no re-solve at the sharded/replicated
     hand-off) and ``levels_run`` reports the true count.
     """
+    _dep.warn_once("repro.core.sodm.solve_sharded",
+                   "repro.api.ODMEstimator.fit")
+    return _solve_sharded(spec, x, y, params, cfg, key, mesh,
+                          data_axis=data_axis)
+
+
+def _solve_sharded(spec: kf.KernelSpec, x: Array, y: Array,
+                   params: ODMParams, cfg: SODMConfig, key: jax.Array,
+                   mesh: jax.sharding.Mesh,
+                   data_axis: str = "data") -> SODMResult:
     from jax.experimental.shard_map import shard_map
 
     M = x.shape[0]
     if engines.wants_dsvrg(cfg.engine, spec.name, M, cfg.dsvrg_threshold):
         return _solve_dsvrg(spec, x, y, params, cfg, key, mesh=mesh,
                             data_axis=data_axis,
-                            auto=cfg.engine != "dsvrg")
+                            auto=cfg.engine != "dsvrg")[0]
     K0 = cfg.p ** cfg.levels
     n_dev = mesh.shape[data_axis]
     if K0 % n_dev != 0:
@@ -443,12 +461,18 @@ def _cached_model(spec: kf.KernelSpec, res: SODMResult, x_train: Array,
 
 def fit(spec: kf.KernelSpec, x: Array, y: Array, params: ODMParams,
         cfg: SODMConfig, key: jax.Array):
-    """Solve + compile in one step: returns (SODMResult, FittedODM).
+    """Solve + compile in one step: returns ``(SODMResult, FittedODM)``.
 
-    The artifact is the deployable model — the permutation gather and SV
-    packing happen here exactly once, never again at predict time.
+    Legacy entry point — the supported training API is
+    ``repro.api.ODMEstimator.fit``, which returns ``(FittedODM,
+    FitReport)``. THIS shim's tuple shape ``(SODMResult, FittedODM)`` is
+    frozen for back-compat (pinned by tests/test_api.py); it warns once
+    and delegates unchanged. The artifact is the deployable model — the
+    permutation gather and SV packing happen here exactly once, never
+    again at predict time.
     """
-    res = solve(spec, x, y, params, cfg, key)
+    _dep.warn_once("repro.core.sodm.fit", "repro.api.ODMEstimator.fit")
+    res = _solve(spec, x, y, params, cfg, key)
     return res, _cached_model(spec, res, x, y)
 
 

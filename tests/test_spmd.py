@@ -118,6 +118,24 @@ a2 = odm.accuracy(y, sodm.predict(spec_lin, er2, x, y, x))
 da = abs(float(a1) - float(a2))
 check("sodm dsvrg engine sharded acc", da < 0.005, f"{float(a1):.4f} vs {float(a2):.4f}")
 
+# --- 4d. unified API: estimator fit on the mesh -------------------------
+from repro.api import ODMEstimator, ProblemSpec
+est = ODMEstimator(ProblemSpec(kernel=spec, params=params), route="sodm",
+                   cfg=scfg, mesh=mesh, data_axis="data")
+am, ar = est.fit(x, y, jax.random.PRNGKey(3))
+ra = ar.raw
+oa = float(odm.dual_objective(kf.signed_gram(spec, x[ra.perm], y[ra.perm]),
+                              ra.alpha, params, float(Mn)))
+check("api estimator sharded sodm objective", abs(oa - o1) < 1e-3,
+      f"{oa:.5f} vs {o1:.5f}")
+est_l = ODMEstimator(ProblemSpec(kernel=spec_lin, params=params), cfg=ecfg,
+                     mesh=mesh, data_axis="data")
+lm_, lr = est_l.fit(x, y, jax.random.PRNGKey(5))
+al = odm.accuracy(y, lm_.predict(x))
+check("api estimator sharded dsvrg route",
+      lr.route == "dsvrg" and abs(float(al) - float(a1)) < 0.005,
+      f"route={lr.route} acc={float(al):.4f} vs {float(a1):.4f}")
+
 # --- 4c. serving: SV slab sharded across the data axis ------------------
 from repro import serve
 smodel = serve.from_sodm(spec, r1, x, y)
