@@ -61,7 +61,8 @@ def run(out, quick: bool = False):
         k = jax.random.normal(jax.random.fold_in(KEY, 1), (1, T, 4, 64)) * 0.3
         v = jax.random.normal(jax.random.fold_in(KEY, 2), (1, T, 4, 64)) * 0.3
         f = jax.jit(lambda q, k, v: A._blocked_flash(
-            q, k, v, causal=True, window=None, q_offset=0, bk=256))
+            q, k, v, causal=True, window=None, q_offset=0,
+            bk=256))  # lint: ignore[T001] — micro-bench sweeps this knob
         t, _ = timed(f, q, k, v, warmup=1, iters=3)
         flops = 4 * T * T * 8 * 64  # qk + pv
         out.append(f"kernels,flash_xla,T={T},{t:.4f},"
@@ -79,7 +80,8 @@ def run(out, quick: bool = False):
     t1, _ = timed(f1, Q, warmup=1, iters=2)
     out.append(f"kernels,dual_cd_scalar,M={M},{t1:.4f},")
     f2 = jax.jit(lambda Q: dual_cd.solve_block(Q, p, mscale=float(M),
-                                               block=256, tol=1e-5).alpha)
+                                               block=256,  # lint: ignore[T001] — micro-bench sweeps this knob
+                                               tol=1e-5).alpha)
     t2, _ = timed(f2, Q, warmup=1, iters=2)
     out.append(f"kernels,dual_cd_block,M={M},{t2:.4f},"
                f"speedup_vs_scalar={t1 / t2:.2f}")
@@ -112,15 +114,16 @@ def run(out, quick: bool = False):
         u_d = src.matvec(jnp.zeros((Kf, mf)))
         return a2, u_d
 
-    # the legacy constituents are jitted; clear their trace caches so the
-    # counter sees every pallas_call even if earlier sections traced them
-    cdk.cd_block_sweep.clear_cache()
-    gram_mod.gram_matvec.clear_cache()
+    # count_pallas_calls now walks the jaxpr (sub-jaxprs of jitted
+    # constituents included), so no trace-cache clearing is needed
     legacy = ops.count_pallas_calls(legacy_pass)
     out.append(f"kernels,fused_pass_op_count,K={Kf}_m={mf},"
                f"{fused:d},pallas_calls_per_pass_fused={fused}_legacy="
                f"{legacy}_matvec_launches_saved={legacy - fused}")
-    assert fused == 1, fused
+    # the one-launch pin itself lives in the invariant registry now
+    from repro.analysis import invariants as _inv
+    _inv.verify("kernels.fused_cd.single_launch")
+    assert fused == 1, fused          # and must hold at the bench shapes
 
     # serving: tiled decision-function scorer (kernels/score.py) — one
     # pallas_call per request batch and O(B·S_block) memory, vs the dense
@@ -133,7 +136,6 @@ def run(out, quick: bool = False):
     xq = jax.random.normal(jax.random.fold_in(KEY, 11), (Ts, ds_))
     zs = jax.random.normal(jax.random.fold_in(KEY, 12), (Ss, ds_))
     cs = jax.random.normal(jax.random.fold_in(KEY, 13), (Ss,))
-    score_mod.score_tiles.clear_cache()
     n_calls = ops.count_pallas_calls(lambda: score_mod.score_tiles(
         xq, zs, cs, kind="rbf", gamma=0.5, bt=bt_, bs=bs_, bd=ds_,
         interpret=True))
@@ -142,7 +144,8 @@ def run(out, quick: bool = False):
     out.append(f"kernels,serve_score_op_count,T={Ts}_S={Ss},{n_calls:d},"
                f"pallas_calls_per_batch={n_calls}_dense_gram_bytes="
                f"{dense_bytes}_tile_scratch_bytes={tile_bytes}")
-    assert n_calls == 1, n_calls
+    _inv.verify("kernels.score.single_launch")
+    assert n_calls == 1, n_calls      # and must hold at the bench shapes
     assert tile_bytes < dense_bytes
     t_blk, _ = timed(lambda: score_mod.score_blocked(
         xq, zs, cs, kind="rbf", gamma=0.5, bt=bt_), warmup=1, iters=3)
@@ -162,7 +165,7 @@ def run(out, quick: bool = False):
     a0 = jnp.zeros((K_parts, 2 * m))
     t_ref = None
     for name in engines.LEVEL_ENGINES:   # dsvrg is whole-problem, not level
-        solver = jax.jit(engines.make_local_solver(name, block=128),
+        solver = jax.jit(engines.make_local_solver(name, block=128),  # lint: ignore[T001] — micro-bench sweeps this knob
                          static_argnames=("spec", "params", "tol",
                                          "max_sweeps"))
         t, _ = timed(solver, xs, ys, a0, spec=spec, params=p, tol=1e-5,

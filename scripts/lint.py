@@ -1,0 +1,48 @@
+#!/usr/bin/env python
+"""Repo-convention linter (see ``repro.analysis.boundary_lint``).
+
+Usage:
+    python scripts/lint.py                 # lint src/ benchmarks/ examples/ scripts/
+    python scripts/lint.py FILE [FILE...]  # lint exactly these files
+    python scripts/lint.py --list-rules
+
+Exit status 1 when any violation is found — CI runs this as the first
+half of the ``lint`` job. Stdlib-only (no jax import): fast enough for a
+pre-commit reflex.
+
+Suppression: ``# lint: ignore[CODE]`` on the offending line, or
+``# lint: allow[CODE]`` anywhere in a file to waive a rule file-wide.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+from repro.analysis import boundary_lint as bl  # noqa: E402
+
+
+def main(argv: list[str]) -> int:
+    if "--list-rules" in argv:
+        for code, desc in sorted(bl.RULES.items()):
+            print(f"{code}  {desc}")
+        return 0
+    paths = [a for a in argv if not a.startswith("-")]
+    if not paths:
+        paths = bl.walk_default(_ROOT)
+    violations = bl.lint_paths(paths)
+    for v in violations:
+        print(v)
+    if violations:
+        print(f"\n{len(violations)} violation(s) in "
+              f"{len({v.file for v in violations})} file(s). "
+              f"See `python scripts/lint.py --list-rules`.")
+        return 1
+    print(f"lint OK ({len(paths)} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -4,6 +4,8 @@
 #   scripts/verify.sh          # fast tier (skips the multi-minute SPMD
 #                              # battery and other slow suites)
 #   scripts/verify.sh tier1    # full tier-1 suite
+#   scripts/verify.sh lint     # repo-convention lint + the quick static
+#                              # analysis battery (tests/test_analysis.py)
 #
 # Markers are registered in pytest.ini; tests/conftest.py also prepends
 # src/ to sys.path, but exporting PYTHONPATH here keeps subprocess-based
@@ -14,5 +16,9 @@ export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 case "${1:-fast}" in
   fast)  exec python -m pytest -x -q -m "not slow" ;;
   tier1) exec python -m pytest -x -q ;;
-  *) echo "usage: $0 [fast|tier1]" >&2; exit 2 ;;
+  lint)
+    python scripts/lint.py
+    exec python -m pytest -x -q tests/test_analysis.py -m "not slow"
+    ;;
+  *) echo "usage: $0 [fast|tier1|lint]" >&2; exit 2 ;;
 esac

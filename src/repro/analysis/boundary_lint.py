@@ -1,0 +1,280 @@
+"""AST lint of repo conventions — stdlib-only, fast enough for CI.
+
+Four rules, each encoding a convention this repo adopted in a specific
+PR and has no other machine check for:
+
+* **F001 facade boundary** (PR 5's acceptance rule): outside
+  ``src/repro`` internals, training goes through
+  ``repro.api.ODMEstimator`` — never the legacy module entry points
+  (``sodm.solve/solve_sharded/fit/predict``, ``dsvrg.solve/
+  solve_sharded``, ``baselines.*_solve``). Those shims exist for
+  back-compat tests only; a benchmark or example calling one silently
+  bypasses validation, the registry, and the serving artifact.
+* **T001 tile/step literals**: tiling and step knobs (``bm``/``bn``/
+  ``bd``/``bt``/``bs``/``bq``/``bk``/``block``/``eta``) are config, not
+  call-site magic numbers. A numeric literal bound to one of these
+  kwargs at a call site is flagged — EXCEPT when the callee is a config
+  constructor (name ending in ``Config``/``Params``/``Spec``) or
+  ``dataclasses.replace``, which are exactly where such values belong.
+  Function-def defaults are inherently exempt (they ARE the config).
+* **W001 warn-once shims**: inside ``src/repro``, deprecation warnings
+  go through ``core.deprecation.warn_once`` (one FutureWarning per
+  process), never raw ``warnings.warn(..., FutureWarning)`` — a shim on
+  a hot path must not warn per call.
+* **P001 pallas containment**: ``jax.experimental.pallas`` imports live
+  only under ``src/repro/kernels/`` — every other layer consumes kernels
+  through ``repro.kernels.ops`` so interpret-mode policy and padding
+  stay in one place.
+
+Suppression: append ``# lint: ignore[CODE]`` to a line, or put
+``# lint: allow[CODE]`` anywhere in a file to waive that rule file-wide.
+``scripts/lint.py`` is the CLI; ``tests/test_analysis.py`` pins that the
+seeded fixtures under ``tests/fixtures/lint/`` fail and the real tree
+passes.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+from typing import Iterable, Iterator
+
+__all__ = ["LintViolation", "lint_file", "lint_paths", "walk_default",
+           "RULES", "TILE_KNOBS", "LEGACY_ENTRY_POINTS"]
+
+#: tiling/step kwargs that must come from config, not call-site literals
+TILE_KNOBS = frozenset({"bm", "bn", "bd", "bt", "bs", "bq", "bk",
+                        "block", "eta"})
+
+#: legacy attribute entry points per module alias target (F001)
+LEGACY_ENTRY_POINTS = {
+    "repro.core.sodm": {"solve", "solve_sharded", "fit", "predict"},
+    "repro.core.dsvrg": {"solve", "solve_sharded"},
+}
+_BASELINES_MOD = "repro.core.baselines"
+
+#: callee names whose keywords ARE configuration (T001 exemption)
+_CONFIG_CALL_RE = re.compile(r"(Config|Params|Spec)$|^replace$|^create$")
+
+RULES = {
+    "F001": "legacy solver entry point called outside src/repro — use "
+            "repro.api.ODMEstimator",
+    "T001": "hardcoded tile/step size at a call site — move it into a "
+            "config dataclass",
+    "W001": "raw FutureWarning/DeprecationWarning in src/repro — use "
+            "core.deprecation.warn_once",
+    "P001": "pallas import outside src/repro/kernels/ — consume kernels "
+            "via repro.kernels.ops",
+}
+
+_IGNORE_RE = re.compile(r"#\s*lint:\s*ignore\[([A-Z]\d{3}(?:\s*,\s*[A-Z]\d{3})*)\]")
+_ALLOW_RE = re.compile(r"#\s*lint:\s*allow\[([A-Z]\d{3}(?:\s*,\s*[A-Z]\d{3})*)\]")
+
+
+@dataclasses.dataclass(frozen=True)
+class LintViolation:
+    file: str
+    line: int
+    code: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.file}:{self.line}: {self.code} {self.message}"
+
+
+def _codes(match: re.Match) -> set[str]:
+    return {c.strip() for c in match.group(1).split(",")}
+
+
+def _suppressions(source: str) -> tuple[dict[int, set[str]], set[str]]:
+    per_line: dict[int, set[str]] = {}
+    per_file: set[str] = set()
+    for i, text in enumerate(source.splitlines(), start=1):
+        m = _IGNORE_RE.search(text)
+        if m:
+            per_line.setdefault(i, set()).update(_codes(m))
+        m = _ALLOW_RE.search(text)
+        if m:
+            per_file.update(_codes(m))
+    return per_line, per_file
+
+
+def _dotted(node: ast.AST) -> str | None:
+    """'a.b.c' for an Attribute/Name chain, else None."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, path: str, in_repro: bool, in_kernels: bool,
+                 is_deprecation_mod: bool):
+        self.path = path
+        self.in_repro = in_repro
+        self.in_kernels = in_kernels
+        self.is_deprecation_mod = is_deprecation_mod
+        # local alias -> fully qualified module (F001 tracking)
+        self.aliases: dict[str, str] = {}
+        # names imported directly from a legacy module: name -> (mod, attr)
+        self.direct: dict[str, tuple[str, str]] = {}
+        self.out: list[tuple[int, str, str]] = []
+
+    # -- import tracking / P001 -------------------------------------------
+
+    def _note_module(self, fq: str, asname: str, lineno: int) -> None:
+        if "pallas" in fq.split(".") and not self.in_kernels:
+            self.out.append((lineno, "P001",
+                             f"import of {fq!r}: {RULES['P001']}"))
+        self.aliases[asname] = fq
+
+    def visit_Import(self, node: ast.Import) -> None:
+        for a in node.names:
+            self._note_module(a.name, a.asname or a.name.split(".")[0],
+                              node.lineno)
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        mod = node.module or ""
+        if node.level == 0:
+            if "pallas" in mod.split(".") and not self.in_kernels:
+                self.out.append((node.lineno, "P001",
+                                 f"import from {mod!r}: {RULES['P001']}"))
+            for a in node.names:
+                fq = f"{mod}.{a.name}" if mod else a.name
+                name = a.asname or a.name
+                if "pallas" in fq.split(".") and not self.in_kernels:
+                    self.out.append((node.lineno, "P001",
+                                     f"import of {fq!r}: {RULES['P001']}"))
+                # `from repro.core import sodm` binds a legacy module...
+                if fq in LEGACY_ENTRY_POINTS or fq == _BASELINES_MOD:
+                    self.aliases[name] = fq
+                # ...while `from repro.core.sodm import solve` binds the
+                # entry point itself
+                if (mod in LEGACY_ENTRY_POINTS
+                        and a.name in LEGACY_ENTRY_POINTS[mod]):
+                    self.direct[name] = (mod, a.name)
+                if (mod == _BASELINES_MOD and a.name.endswith("_solve")
+                        and not a.name.startswith("_")):
+                    self.direct[name] = (mod, a.name)
+        self.generic_visit(node)
+
+    # -- call-site rules ---------------------------------------------------
+
+    def _check_facade(self, node: ast.Call) -> None:
+        if self.in_repro:
+            return
+        fn = node.func
+        if isinstance(fn, ast.Name) and fn.id in self.direct:
+            mod, attr = self.direct[fn.id]
+            self.out.append((node.lineno, "F001",
+                             f"call to {mod}.{attr}: {RULES['F001']}"))
+            return
+        if isinstance(fn, ast.Attribute):
+            base = _dotted(fn.value)
+            if base is None:
+                return
+            target = self.aliases.get(base, base)
+            legacy = LEGACY_ENTRY_POINTS.get(target)
+            if legacy is not None and fn.attr in legacy:
+                self.out.append((node.lineno, "F001",
+                                 f"call to {target}.{fn.attr}: "
+                                 f"{RULES['F001']}"))
+            elif (target == _BASELINES_MOD and fn.attr.endswith("_solve")
+                  and not fn.attr.startswith("_")):
+                self.out.append((node.lineno, "F001",
+                                 f"call to {target}.{fn.attr}: "
+                                 f"{RULES['F001']}"))
+
+    def _check_tile_literals(self, node: ast.Call) -> None:
+        callee = None
+        if isinstance(node.func, ast.Name):
+            callee = node.func.id
+        elif isinstance(node.func, ast.Attribute):
+            callee = node.func.attr
+        if callee is not None and _CONFIG_CALL_RE.search(callee):
+            return
+        for kw in node.keywords:
+            if kw.arg in TILE_KNOBS and isinstance(kw.value, ast.Constant) \
+                    and isinstance(kw.value.value, (int, float)) \
+                    and not isinstance(kw.value.value, bool):
+                self.out.append((kw.value.lineno, "T001",
+                                 f"{kw.arg}={kw.value.value!r} passed to "
+                                 f"{callee or 'a call'}(): "
+                                 f"{RULES['T001']}"))
+
+    def _check_warn(self, node: ast.Call) -> None:
+        if not self.in_repro or self.is_deprecation_mod:
+            return
+        fn = _dotted(node.func)
+        if fn not in ("warnings.warn", "warn"):
+            return
+        for arg in list(node.args) + [kw.value for kw in node.keywords]:
+            name = _dotted(arg)
+            if name in ("FutureWarning", "DeprecationWarning"):
+                self.out.append((node.lineno, "W001", RULES["W001"]))
+                return
+
+    def visit_Call(self, node: ast.Call) -> None:
+        self._check_facade(node)
+        self._check_tile_literals(node)
+        self._check_warn(node)
+        self.generic_visit(node)
+
+
+def _classify(path: str) -> tuple[bool, bool, bool]:
+    norm = path.replace(os.sep, "/")
+    in_repro = "src/repro/" in norm or norm.startswith("repro/")
+    in_kernels = "repro/kernels/" in norm
+    is_dep = norm.endswith("repro/core/deprecation.py")
+    return in_repro, in_kernels, is_dep
+
+
+def lint_file(path: str, source: str | None = None) -> list[LintViolation]:
+    """Lint one file; returns violations after pragma suppression."""
+    if source is None:
+        with open(path, encoding="utf-8") as fh:
+            source = fh.read()
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [LintViolation(file=path, line=e.lineno or 0, code="E999",
+                              message=f"syntax error: {e.msg}")]
+    per_line, per_file = _suppressions(source)
+    in_repro, in_kernels, is_dep = _classify(path)
+    visitor = _Visitor(path, in_repro, in_kernels, is_dep)
+    visitor.visit(tree)
+    out = []
+    for line, code, msg in visitor.out:
+        if code in per_file or code in per_line.get(line, set()):
+            continue
+        out.append(LintViolation(file=path, line=line, code=code,
+                                 message=msg))
+    return sorted(out, key=lambda v: (v.file, v.line, v.code))
+
+
+def walk_default(root: str) -> list[str]:
+    """The default lint scope: src, benchmarks, examples, scripts —
+    everything that ships; tests (and their seeded fixtures) opt in via
+    explicit arguments."""
+    files: list[str] = []
+    for sub in ("src", "benchmarks", "examples", "scripts"):
+        base = os.path.join(root, sub)
+        for dirpath, dirnames, filenames in os.walk(base):
+            dirnames[:] = [d for d in dirnames
+                           if d not in ("__pycache__", ".git")]
+            files.extend(os.path.join(dirpath, f)
+                         for f in sorted(filenames) if f.endswith(".py"))
+    return sorted(files)
+
+
+def lint_paths(paths: Iterable[str]) -> list[LintViolation]:
+    out: list[LintViolation] = []
+    for p in paths:
+        out.extend(lint_file(p))
+    return out

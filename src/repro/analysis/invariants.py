@@ -1,0 +1,599 @@
+"""The invariant registry: kernels and routes DECLARE, one battery checks.
+
+Before this module the repo's plan-level pins lived wherever they were
+first needed — ``sodm.perm_gather_count`` in core, launch-count asserts
+in ``benchmarks/kernels_bench.py``, the trace-once pin in
+``tests/test_dsvrg.py``. Each was real, none was discoverable, and a new
+kernel or route shipped with whatever pins its author remembered to add.
+Here every Pallas kernel and every registered training route declares
+its invariants as data:
+
+    declare(Invariant(
+        name="kernels.score.single_launch", subject="score",
+        kind="kernel", description="one pallas_call per request batch",
+        verify=_score_single_launch))
+
+``tests/test_analysis.py`` runs ONE parametrized battery over
+:func:`invariants`, and a meta-test asserts every kernel in
+``pallas_check.PLAN_BUILDERS`` and every route in
+``api.registry.routes()`` has at least one declaration — forgetting the
+pin is itself a test failure.
+
+Also hosts the process-wide :class:`Counter` store backing the legacy
+regression pins (``sodm.perm_gather_count``, ``dsvrg.epoch_trace_count``
+are thin aliases over these), and :func:`count_pallas_calls`, the
+jaxpr-walk launch counter (no monkeypatching, no trace-cache clearing).
+
+Import discipline: this module imports only :mod:`repro.analysis` and
+jax at the top level; every verify closure lazy-imports the subsystem it
+checks, so ``repro.core`` modules can import this one for counters
+without a cycle.
+"""
+from __future__ import annotations
+
+# lint: allow[T001] — the verify closures trace kernels at minimal probe
+# shapes; their tiny tile kwargs are the fixture, not production config.
+
+import dataclasses
+import warnings
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import jaxpr_lint as jl
+from repro.analysis import pallas_check as pc
+
+__all__ = [
+    "Counter", "counter", "counters", "Invariant", "declare", "invariants",
+    "get", "verify", "verify_all", "count_pallas_calls",
+]
+
+
+# ---------------------------------------------------------------------------
+# counters (process-wide regression pins)
+# ---------------------------------------------------------------------------
+
+class Counter:
+    """A named append-only event counter. ``events`` is a plain list so
+    legacy module globals can alias it in place (``dsvrg._TRACE_EVENTS``
+    IS ``counter("dsvrg.epoch_trace").events`` — same object)."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.events: list = []
+
+    @property
+    def count(self) -> int:
+        return len(self.events)
+
+    def bump(self, event=None) -> None:
+        self.events.append(event)
+
+    def reset(self) -> None:
+        del self.events[:]
+
+    def __repr__(self) -> str:
+        return f"Counter({self.name!r}, count={self.count})"
+
+
+_COUNTERS: dict[str, Counter] = {}
+
+
+def counter(name: str) -> Counter:
+    """Get-or-create the process-wide counter ``name``."""
+    got = _COUNTERS.get(name)
+    if got is None:
+        got = _COUNTERS[name] = Counter(name)
+    return got
+
+
+def counters() -> dict[str, Counter]:
+    return dict(_COUNTERS)
+
+
+def count_pallas_calls(fn) -> int:
+    """Count ``pallas_call`` sites in the traced plan of the zero-arg
+    thunk ``fn`` — by walking the jaxpr (sub-jaxprs of jitted
+    constituents included), so unlike the old monkeypatch counter it
+    needs no ``clear_cache()`` discipline and cannot undercount on a
+    warm trace cache."""
+    return jl.count_primitive(fn, "pallas_call")
+
+
+# ---------------------------------------------------------------------------
+# the registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Invariant:
+    """One declared plan-level invariant.
+
+    ``subject`` is the kernel registry name (a ``pallas_check.
+    PLAN_BUILDERS`` key) or the route name (an ``api.registry`` route);
+    ``kind`` says which namespace that is. ``verify`` is a zero-arg
+    callable that raises ``AssertionError`` (usually
+    :class:`~repro.analysis.jaxpr_lint.InvariantViolation`) on failure;
+    its return value, if any, is a human-readable result. ``slow`` marks
+    declarations the quick CI tier skips (subprocess compiles etc.)."""
+
+    name: str
+    subject: str
+    kind: str                      # "kernel" | "route"
+    description: str
+    verify: Callable[[], object] = dataclasses.field(compare=False)
+    slow: bool = False
+
+    def __post_init__(self):
+        if self.kind not in ("kernel", "route"):
+            raise ValueError(f"kind must be 'kernel' or 'route', "
+                             f"got {self.kind!r}")
+
+
+_REGISTRY: dict[str, Invariant] = {}
+
+
+def declare(inv: Invariant) -> Invariant:
+    """Register ``inv``; duplicate names raise (a pin silently replaced
+    is a pin silently dropped)."""
+    if inv.name in _REGISTRY:
+        raise ValueError(f"invariant {inv.name!r} already declared")
+    _REGISTRY[inv.name] = inv
+    return inv
+
+
+def invariants() -> tuple[Invariant, ...]:
+    """All declared invariants, name-sorted (stable parametrize order)."""
+    return tuple(_REGISTRY[k] for k in sorted(_REGISTRY))
+
+
+def get(name: str) -> Invariant:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"no invariant {name!r}; declared: "
+                       f"{sorted(_REGISTRY)}") from None
+
+
+def verify(name: str):
+    """Run one invariant by name; raises on violation."""
+    return get(name).verify()
+
+
+def verify_all(include_slow: bool = False) -> dict[str, object]:
+    """Run every declared invariant; returns {name: result}. Raises on
+    the first violation (the battery in tests runs them individually)."""
+    return {inv.name: inv.verify() for inv in invariants()
+            if include_slow or not inv.slow}
+
+
+# ---------------------------------------------------------------------------
+# shared tiny fixtures for the built-in declarations
+# ---------------------------------------------------------------------------
+
+def _toy_data(M: int = 32, d: int = 4, seed: int = 0):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = jnp.concatenate([jax.random.normal(k1, (M // 2, d)) + 1.0,
+                         jax.random.normal(k2, (M // 2, d)) - 1.0])
+    y = jnp.concatenate([jnp.ones(M // 2), -jnp.ones(M // 2)])
+    perm = jax.random.permutation(k3, M)
+    return x[perm], y[perm]
+
+
+def _assert_single_launch(thunk, what: str) -> str:
+    n = count_pallas_calls(thunk)
+    if n != 1:
+        raise jl.InvariantViolation(
+            f"{what}: expected exactly 1 pallas_call in the plan, "
+            f"found {n}")
+    return f"{what}: 1 launch"
+
+
+# ---------------------------------------------------------------------------
+# kernel invariants
+# ---------------------------------------------------------------------------
+
+def _gram_single_launch():
+    from repro.kernels import ops
+    x, _ = _toy_data(16, 8)
+    z, _ = _toy_data(16, 8, seed=1)
+    spec = ops._RbfSpec(0.5)
+    return _assert_single_launch(
+        lambda: ops.gram(x, z, spec, bm=8, bn=8, bd=8),
+        "gram (one launch per Gram block, all D-chunks inside the grid)")
+
+
+def _gram_vmem():
+    out = [pc.check_plan(pc.gram_plan())]
+    # the laplacian path carries an extra (bm, bn, chunk) broadcast slab
+    out.append(pc.check_plan(pc.gram_plan(kind="laplacian")))
+    return "\n".join(out)
+
+
+def _gram_matvec_single_launch():
+    from repro.kernels import ops
+    x, y = _toy_data(16, 8)
+    xs = x.reshape(2, 8, 8)
+    g = jnp.ones((2, 8))
+    spec = ops._RbfSpec(0.5)
+    return _assert_single_launch(
+        lambda: ops.gram_matvec(xs, g, spec, bm=8, bn=8, bd=8),
+        "gram_matvec (all K partitions and tiles in one launch)")
+
+
+def _gram_matvec_vmem():
+    return pc.check_plan(pc.gram_matvec_plan())
+
+
+def _score_single_launch():
+    from repro.kernels import score
+    x, _ = _toy_data(16, 8)
+    z, _ = _toy_data(32, 8, seed=1)
+    c = jnp.ones((32,))
+    return _assert_single_launch(
+        lambda: score.score_tiles(x, z, c, kind="rbf", gamma=0.5, bt=8,
+                                  bs=8, bd=8, interpret=True),
+        "score (one launch per request batch)")
+
+
+def _score_gather_free():
+    from repro.core import kernel_fns as kf
+    from repro.kernels import ops
+    x, _ = _toy_data(16, 8)
+    z, _ = _toy_data(32, 8, seed=1)
+    c = jnp.ones((32,))
+    spec = kf.KernelSpec(name="rbf", gamma=0.5)
+    rules = [jl.gather_free(), jl.no_host_sync_in_loops()]
+    # the kernel path AND the interpret-mode streaming path must both
+    # stay gather-free: the permutation is applied at compile_model time
+    jl.check(lambda: ops.decision_scores(x, z, c, spec, bt=8, bs=8, bd=8,
+                                         tiled=True),
+             rules, subject="decision_scores(tiled=True)")
+    jl.check(lambda: ops.decision_scores(x, z, c, spec, bt=8),
+             rules, subject="decision_scores(auto)")
+    return "score paths are gather-free"
+
+
+def _score_vmem():
+    return pc.check_plan(pc.score_plan())
+
+
+def _odm_grad_single_launch():
+    from repro.kernels import ops
+    x, y = _toy_data(16, 8)
+    w = jnp.zeros(8)
+    return _assert_single_launch(
+        lambda: ops.odm_grad(w, x, y, bm=8),
+        "odm_grad (full primal gradient in one launch)")
+
+
+def _odm_grad_vmem():
+    out = [pc.check_plan(pc.odm_grad_plan())]
+    # the _shrink_bm policy must keep wide-feature sweeps inside budget
+    from repro.kernels import ops
+    for d in (1024, 2048, 4096, 8192):
+        bm = ops._shrink_bm(512, 65536, d)
+        out.append(pc.check_plan(pc.odm_grad_plan(d=d, bm=bm)))
+    return "\n".join(out)
+
+
+def _svrg_grad_single_launch():
+    from repro.kernels import ops
+    x, y = _toy_data(16, 8)
+    w = jnp.zeros(8)
+    return _assert_single_launch(
+        lambda: ops.svrg_grad(w, w, w, x, y, bm=8),
+        "odm_svrg_grad (one launch per inner step)")
+
+
+def _svrg_grad_vmem():
+    return pc.check_plan(pc.svrg_grad_plan())
+
+
+def _fused_cd_sources(B: int = 8, K: int = 2, d: int = 8):
+    from repro.core import kernel_fns as kf
+    from repro.kernels import gram as gram_mod
+    m = 2 * B
+    x, y = _toy_data(K * m, d)
+    xs, ys = x.reshape(K, m, d), y.reshape(K, m)
+    spec = kf.KernelSpec(name="rbf", gamma=0.5)
+    import jax as _jax
+    from repro.kernels import dual_cd_block as cdk
+    qb = _jax.vmap(lambda q: cdk.extract_diag_blocks(q, B))(
+        _jax.vmap(lambda xk, yk: kf.signed_gram(spec, xk, yk))(xs, ys))
+    dense = gram_mod.DenseSource(
+        _jax.vmap(lambda xk, yk: kf.signed_gram(spec, xk, yk))(xs, ys))
+    mfree = gram_mod.make_kernel_source(spec, xs, ys, bm=B, bn=B,
+                                        interpret=True)
+    a = jnp.zeros((K, m // B, 2 * B))
+    u = jnp.zeros((K, m // B, B))
+    v = jnp.ones((K, m // B, B))
+    return qb, dense, mfree, a, u, v, m
+
+
+def _fused_cd_single_launch():
+    from repro.kernels import dual_cd_block as cdk
+    qb, dense, mfree, a, u, v, m = _fused_cd_sources()
+    for label, src in (("dense", dense), ("matrix-free", mfree)):
+        _assert_single_launch(
+            lambda src=src: cdk.fused_cd_pass(
+                qb, src, a, u, v, c=1.0, ups=0.5, theta=0.1,
+                mscale=float(m), n_steps=4, exit_tol=0.0, interpret=True),
+            f"fused_cd_pass[{label}] (one launch per sweep)")
+    return "fused_cd_pass: 1 launch per pass, both sources"
+
+
+def _fused_cd_vmem():
+    return "\n".join([pc.check_plan(pc.fused_cd_plan(source="kernel")),
+                      pc.check_plan(pc.fused_cd_plan(source="dense"))])
+
+
+def _fused_cd_vmem_ceiling():
+    plan = pc.fused_cd_plan(m=1_000_000, source="kernel")
+    try:
+        pc.check_plan(plan)
+    except pc.PallasBudgetError as e:
+        msg = str(e)
+        assert "u_d" in msg and "exceeds" in msg, msg
+        return ("m=10^6 fused plan correctly rejected at plan time "
+                "(partition-resident u_d row)")
+    raise jl.InvariantViolation(
+        "the m=10^6 fused matrix-free plan fit the VMEM budget — the "
+        "(1, m) u_d ceiling (ROADMAP open item 1) is no longer being "
+        "caught; if the kernel layout changed, update fused_cd_plan")
+
+
+# ---------------------------------------------------------------------------
+# route invariants
+# ---------------------------------------------------------------------------
+
+_LINEAR_ROUTES = ("dsvrg", "svrg", "csvrg")
+
+
+def _route_cfg(route: str):
+    from repro.core import dsvrg as dsvrg_mod
+    from repro.core import sodm as sodm_mod
+    dcfg = dsvrg_mod.DSVRGConfig(n_partitions=4, epochs=2, batch=8,
+                                 n_landmarks=4)
+    return sodm_mod.SODMConfig(p=2, levels=2, n_landmarks=4, tol=1e-4,
+                               max_sweeps=50, dsvrg=dcfg)
+
+
+def _facade_artifact(route: str):
+    """ODMEstimator.fit(route) on a toy problem returns a deployable
+    FittedODM without tripping any legacy-shim FutureWarning — the facade
+    never routes through its own deprecated entry points."""
+    from repro.api import ODMEstimator, ProblemSpec
+    from repro.core import kernel_fns as kf
+    from repro.serve.model import FittedODM
+    kernel = "linear" if route in _LINEAR_ROUTES else "rbf"
+    problem = ProblemSpec(kernel=kf.KernelSpec(name=kernel, gamma=0.5))
+    x, y = _toy_data(32, 4)
+    est = ODMEstimator(problem, route=route, cfg=_route_cfg(route))
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        model, report = est.fit(x, y, jax.random.PRNGKey(0))
+    legacy = [w for w in caught if issubclass(w.category, FutureWarning)]
+    if legacy:
+        raise jl.InvariantViolation(
+            f"route {route!r} fit raised legacy FutureWarning(s): "
+            f"{[str(w.message) for w in legacy]}")
+    assert isinstance(model, FittedODM), type(model)
+    assert report.route == route, report.route
+    preds = est.predict(x)
+    assert preds.shape == (32,)
+    return f"route {route}: FittedODM artifact, no legacy warnings"
+
+
+def _make_facade_invariant(route: str) -> Callable[[], object]:
+    return lambda: _facade_artifact(route)
+
+
+def _sodm_gather_once():
+    """The partition permutation is gathered ONCE per fitted model:
+    repeated predicts through the cached compiled model add nothing."""
+    from repro.core import kernel_fns as kf
+    from repro.core import odm, sodm
+    x, y = _toy_data(32, 4)
+    spec = kf.KernelSpec(name="rbf", gamma=0.5)
+    params = odm.ODMParams(lam=1.0, theta=0.1, ups=0.5)
+    cfg = _route_cfg("sodm")
+    res = sodm._solve(spec, x, y, params, cfg, jax.random.PRNGKey(0))
+    c0 = sodm.perm_gather_count()
+    sodm.predict(spec, res, x, y, x[:8])
+    c1 = sodm.perm_gather_count()
+    sodm.predict(spec, res, x, y, x[8:16])
+    c2 = sodm.perm_gather_count()
+    if not (c1 == c0 + 1 and c2 == c1):
+        raise jl.InvariantViolation(
+            f"perm gather pin broken: counts {c0} -> {c1} -> {c2}; "
+            f"expected exactly one gather at model compile, zero per "
+            f"predict")
+    return "sodm: 1 perm gather per fitted model, 0 per predict"
+
+
+def _dsvrg_trace_once():
+    """A whole DSVRG solve is ONE jit trace; re-solving the same config
+    and shapes re-traces nothing (the scan driver is cache-stable)."""
+    from repro.core import dsvrg, odm
+    x, y = _toy_data(32, 4)
+    params = odm.ODMParams(lam=1.0, theta=0.1, ups=0.5)
+    cfg = dsvrg.DSVRGConfig(n_partitions=4, epochs=2, batch=8,
+                            n_landmarks=4)
+    key = jax.random.PRNGKey(0)
+    dsvrg._solve(x, y, params, cfg, key)          # warm (may or may not trace)
+    n1 = dsvrg.epoch_trace_count()
+    dsvrg._solve(x, y, params, cfg, key)
+    n2 = dsvrg.epoch_trace_count()
+    if n2 != n1:
+        raise jl.InvariantViolation(
+            f"dsvrg re-traced on an identical config: trace count "
+            f"{n1} -> {n2} (cfg or shapes are not cache-stable)")
+    return "dsvrg: identical re-solve adds 0 traces"
+
+
+def _dsvrg_epoch_scan_shape():
+    """The local driver's plan: ONE scan of length cfg.epochs (all epochs
+    in one trace), and no collective or host-sync primitive anywhere in
+    its loop bodies — a single-process solve never talks to the wire."""
+    from repro.core import dsvrg, odm
+    EPOCHS = 5                       # distinct from K=2 and S=2 below
+    x, y = _toy_data(8, 4)
+    params = odm.ODMParams(lam=1.0, theta=0.1, ups=0.5)
+    cfg = dsvrg.DSVRGConfig(n_partitions=2, epochs=EPOCHS, batch=2)
+    xs, ys, wts = dsvrg._pad_batches(x.reshape(2, 4, 4),
+                                     y.reshape(2, 4), cfg.batch)
+    w0 = jnp.zeros(4)
+    thunk = lambda: dsvrg._run(w0, xs, ys, wts, params=params, cfg=cfg,
+                               M=8)
+    jl.check(thunk,
+             [jl.expect_scan(EPOCHS, count=1, name="one_epoch_scan"),
+              jl.no_collectives_in_loops(),
+              jl.no_host_sync_in_loops()],
+             subject="dsvrg._run")
+    return f"dsvrg._run: one scan of length {EPOCHS}, loop bodies clean"
+
+
+_SHARDED_HOIST_SCRIPT = r"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import dsvrg
+from repro.core.odm import ODMParams
+from repro.launch import hlo_analysis as ha
+
+mesh = jax.sharding.Mesh(np.array(jax.devices()[:2]), ("data",))
+params = ODMParams(lam=1.0, theta=0.1, ups=0.5)
+M, d, K, batch = 32, 4, 2, 8
+
+
+def all_gathers(epochs):
+    cfg = dsvrg.DSVRGConfig(n_partitions=K, epochs=epochs, batch=batch,
+                            schedule="serial")
+    xs = jnp.zeros((K, M // K, d))
+    ys = jnp.ones((K, M // K))
+    xsb, ysb, wts = dsvrg._pad_batches(xs, ys, batch)
+    run = dsvrg._make_sharded_run(mesh, params, cfg, M, "data")
+    hlo = run.lower(jnp.zeros(d), xsb, ysb, wts).compile().as_text()
+    return ha.collective_bytes(hlo).count_by_kind.get("all-gather", 0)
+
+
+a2, a6 = all_gathers(2), all_gathers(6)
+assert a2 > 0, "no all-gather found at all — serial schedule changed?"
+assert a2 == a6, (
+    f"all-gather count grows with the epoch count ({a2} at 2 epochs vs "
+    f"{a6} at 6): the serial-schedule slab gather has slid back inside "
+    f"the epoch scan (the PR 3 hoisting trap)")
+print(f"OK all_gathers={a2} at both epoch counts")
+"""
+
+
+def _dsvrg_sharded_gather_hoisted():
+    """The sharded serial schedule all-gathers its (loop-invariant) slab
+    ONCE, outside the epoch scan. Machine check for the PR 3 trap: the
+    trip-multiplicity-weighted all-gather count in the compiled HLO must
+    not grow with cfg.epochs. Runs in a subprocess with 2 forced host
+    devices (device count is fixed at jax init)."""
+    import os
+    import subprocess
+    import sys
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        " --xla_force_host_platform_device_count=2")
+    env["JAX_PLATFORMS"] = "cpu"
+    src_root = os.path.join(os.path.dirname(__file__), "..", "..")
+    env["PYTHONPATH"] = (os.path.abspath(src_root) + os.pathsep +
+                         env.get("PYTHONPATH", ""))
+    proc = subprocess.run([sys.executable, "-c", _SHARDED_HOIST_SCRIPT],
+                          env=env, capture_output=True, text=True,
+                          timeout=600)
+    if proc.returncode != 0:
+        raise jl.InvariantViolation(
+            f"sharded gather-hoist check failed:\n{proc.stdout}\n"
+            f"{proc.stderr}")
+    return proc.stdout.strip()
+
+
+# ---------------------------------------------------------------------------
+# declarations
+# ---------------------------------------------------------------------------
+
+def _declare_builtins() -> None:
+    kern = [
+        ("kernels.gram.single_launch", "gram",
+         "one pallas_call per Gram build", _gram_single_launch),
+        ("kernels.gram.vmem_plan", "gram",
+         "default (and laplacian) tile plans fit the VMEM budget",
+         _gram_vmem),
+        ("kernels.gram_matvec.single_launch", "gram_matvec",
+         "one pallas_call for all K partition matvecs",
+         _gram_matvec_single_launch),
+        ("kernels.gram_matvec.vmem_plan", "gram_matvec",
+         "default tile plan fits the VMEM budget", _gram_matvec_vmem),
+        ("kernels.score.single_launch", "score",
+         "one pallas_call per request batch", _score_single_launch),
+        ("kernels.score.gather_free", "score",
+         "served score paths contain no gather and no host sync",
+         _score_gather_free),
+        ("kernels.score.vmem_plan", "score",
+         "default tile plan fits the VMEM budget", _score_vmem),
+        ("kernels.odm_grad.single_launch", "odm_grad",
+         "full primal gradient in one pallas_call",
+         _odm_grad_single_launch),
+        ("kernels.odm_grad.vmem_plan", "odm_grad",
+         "_shrink_bm keeps every feature width inside the VMEM budget",
+         _odm_grad_vmem),
+        ("kernels.odm_svrg_grad.single_launch", "odm_svrg_grad",
+         "one pallas_call per DSVRG inner step", _svrg_grad_single_launch),
+        ("kernels.odm_svrg_grad.vmem_plan", "odm_svrg_grad",
+         "default tile plan fits the VMEM budget", _svrg_grad_vmem),
+        ("kernels.fused_cd.single_launch", "fused_cd",
+         "one pallas_call per fused sweep, dense and matrix-free",
+         _fused_cd_single_launch),
+        ("kernels.fused_cd.vmem_plan", "fused_cd",
+         "default plans (both sources) fit the VMEM budget",
+         _fused_cd_vmem),
+        ("kernels.fused_cd.vmem_ceiling", "fused_cd",
+         "the m=10^6 partition-resident u_d plan is REJECTED at plan "
+         "time with a sizing report", _fused_cd_vmem_ceiling),
+    ]
+    for name, subject, desc, fn in kern:
+        declare(Invariant(name=name, subject=subject, kind="kernel",
+                          description=desc, verify=fn))
+
+    for route in ("sodm", "dsvrg", "cascade", "dip", "dc", "svrg",
+                  "csvrg"):
+        declare(Invariant(
+            name=f"routes.{route}.facade_artifact", subject=route,
+            kind="route",
+            description="ODMEstimator.fit returns a FittedODM with no "
+                        "legacy FutureWarning",
+            verify=_make_facade_invariant(route)))
+
+    declare(Invariant(
+        name="routes.sodm.predict_gather_once", subject="sodm",
+        kind="route",
+        description="one perm gather per fitted model, zero per predict",
+        verify=_sodm_gather_once))
+    declare(Invariant(
+        name="routes.dsvrg.trace_once", subject="dsvrg", kind="route",
+        description="identical re-solve adds zero jit traces",
+        verify=_dsvrg_trace_once))
+    declare(Invariant(
+        name="routes.dsvrg.epoch_scan_shape", subject="dsvrg",
+        kind="route",
+        description="one epoch scan, no collectives/host-sync in loop "
+                    "bodies of the local driver",
+        verify=_dsvrg_epoch_scan_shape))
+    declare(Invariant(
+        name="routes.dsvrg.sharded_gather_hoisted", subject="dsvrg",
+        kind="route", slow=True,
+        description="serial-schedule slab all-gather count in compiled "
+                    "HLO is epoch-count-invariant (hoisted above the "
+                    "scan)",
+        verify=_dsvrg_sharded_gather_hoisted))
+
+
+_declare_builtins()

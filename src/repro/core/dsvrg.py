@@ -113,7 +113,12 @@ class DSVRGResult(NamedTuple):
 # one append per jit trace of a solve driver (local or sharded). The scan
 # body itself is NOT counted — lax.scan legitimately retraces its body for
 # abstract eval; what we pin is that a whole solve is one trace per config.
-_TRACE_EVENTS: list = []
+# The store is the invariant registry's counter ("dsvrg.epoch_trace" —
+# verified by routes.dsvrg.trace_once); _TRACE_EVENTS aliases the SAME
+# list object so existing `_TRACE_EVENTS[-1]` consumers keep working.
+from repro.analysis.invariants import counter as _inv_counter  # noqa: E402
+
+_TRACE_EVENTS: list = _inv_counter("dsvrg.epoch_trace").events
 
 
 def epoch_trace_count() -> int:

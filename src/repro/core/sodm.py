@@ -414,13 +414,19 @@ def _solve_sharded(spec: kf.KernelSpec, x: Array, y: Array,
 # for the cache's lifetime. FIFO-capped as a second bound.
 _MODEL_CACHE: dict = {}
 _MODEL_CACHE_CAP = 8
-_PERM_GATHERS = 0          # incremented once per compile (regression pin)
+
+# the gather pin now lives in the invariant registry (one counter store
+# for every subsystem); this name is the back-compat alias
+from repro.analysis.invariants import counter as _inv_counter  # noqa: E402
+
+_PERM_GATHER_COUNTER = _inv_counter("sodm.perm_gather")
 
 
 def perm_gather_count() -> int:
     """How many times predict/fit have gathered x_train[res.perm] — the
-    per-call-gather regression test pins this at one per fitted model."""
-    return _PERM_GATHERS
+    per-call-gather pin (``routes.sodm.predict_gather_once`` in
+    ``repro.analysis.invariants``) holds this at one per fitted model."""
+    return _PERM_GATHER_COUNTER.count
 
 
 def compile_model(spec: kf.KernelSpec, res: SODMResult, x_train: Array,
@@ -428,9 +434,8 @@ def compile_model(spec: kf.KernelSpec, res: SODMResult, x_train: Array,
     """Compile an ``SODMResult`` into a served ``FittedODM`` (the ONE
     place the partition permutation is applied). ``kw`` forwards
     compression knobs (prune_tol / budget / target)."""
-    global _PERM_GATHERS
     from repro.serve import model as serve_model
-    _PERM_GATHERS += 1
+    _PERM_GATHER_COUNTER.bump((id(res), x_train.shape))
     return serve_model.from_sodm(spec, res, x_train, y_train, **kw)
 
 

@@ -206,10 +206,13 @@ def decision_scores(x: Array, z: Array, coef: Array, spec, *,
 # ---------------------------------------------------------------------------
 
 def _shrink_bm(bm: int, M: int, d: int) -> int:
-    """Shrink the row-tile so the (bm, d) fp32 slab stays under ~8 MB VMEM
-    (shared policy of the fused ODM gradient kernels)."""
+    """Shrink the row-tile so the (bm, d) fp32 slab stays STRICTLY under
+    the ~8 MB single-copy VMEM budget (shared policy of the fused ODM
+    gradient kernels). Strict: at exactly 8 MB the slab alone consumes
+    the whole budget and the resident w/out rows push the launch over —
+    pinned by the ``kernels.odm_grad.vmem_plan`` invariant."""
     bm_eff = min(bm, M)
-    while bm_eff > 8 and bm_eff * d * 4 > 8 * 2 ** 20:
+    while bm_eff > 8 and bm_eff * d * 4 >= 8 * 2 ** 20:
         bm_eff //= 2
     return bm_eff
 
@@ -301,22 +304,12 @@ def count_pallas_calls(fn) -> int:
 
     Used by the kernels benchmark and the engine tests to pin per-pass
     kernel-launch counts (e.g. the fused CD pass must be exactly one).
-    Jitted constituents only reach ``pallas_call`` while tracing, so clear
-    their caches first if they may have been traced with the same shapes.
-    """
-    from jax.experimental import pallas as pl
-    orig, n = pl.pallas_call, [0]
-
-    def counting(*args, **kw):
-        n[0] += 1
-        return orig(*args, **kw)
-
-    pl.pallas_call = counting
-    try:
-        jax.eval_shape(fn)
-    finally:
-        pl.pallas_call = orig
-    return n[0]
+    Delegates to the jaxpr walker in :mod:`repro.analysis.jaxpr_lint`,
+    which recurses into jitted constituents' sub-jaxprs — unlike the old
+    ``pl.pallas_call`` monkeypatch it cannot undercount on a warm trace
+    cache, so no ``clear_cache()`` discipline is needed."""
+    from repro.analysis import jaxpr_lint as _jl
+    return _jl.count_primitive(fn, "pallas_call")
 
 
 # re-export oracles for convenience

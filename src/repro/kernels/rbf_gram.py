@@ -2,7 +2,8 @@
 :mod:`repro.kernels.gram`, which lowers the full ODM kernel family
 (rbf / laplacian / poly / linear) through one shared accumulation
 skeleton. These wrappers pin ``kind="rbf"`` and keep the original
-signatures for existing callers and kernel tests.
+signatures for existing callers and kernel tests; like the other legacy
+entry points they warn ONCE per process (``core.deprecation``).
 """
 from __future__ import annotations
 
@@ -13,11 +14,19 @@ from repro.kernels import gram as _gram
 Array = jax.Array
 
 
+def _warn(entry: str, replacement: str) -> None:
+    # function-level import: kernels/ never imports repro.core at module
+    # scope (the dependency points the other way)
+    from repro.core import deprecation as _dep
+    _dep.warn_once(entry, replacement)
+
+
 def rbf_gram(x: Array, z: Array, yx: Array | None = None,
              yz: Array | None = None, *, gamma: float = 1.0,
              signed: bool = False, bm: int = 256, bn: int = 256,
              bd: int = 512, interpret: bool = False) -> Array:
     """K (or Q if signed) of shape (M, N). See :func:`repro.kernels.gram.gram`."""
+    _warn("repro.kernels.rbf_gram.rbf_gram", "repro.kernels.ops.gram")
     return _gram.gram(x, z, yx, yz, kind="rbf", gamma=gamma, signed=signed,
                       bm=bm, bn=bn, bd=bd, interpret=interpret)
 
@@ -26,5 +35,7 @@ def rbf_gram_matvec(x: Array, z: Array, g: Array, *, gamma: float = 1.0,
                     bm: int = 256, bn: int = 256, bd: int = 512,
                     interpret: bool = False) -> Array:
     """u[k] = K(x[k], z[k]) @ g[k]. See :func:`repro.kernels.gram.gram_matvec`."""
+    _warn("repro.kernels.rbf_gram.rbf_gram_matvec",
+          "repro.kernels.ops.gram_matvec")
     return _gram.gram_matvec(x, z, g, kind="rbf", gamma=gamma, bm=bm, bn=bn,
                              bd=bd, interpret=interpret)

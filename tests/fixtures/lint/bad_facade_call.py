@@ -1,0 +1,16 @@
+"""Seeded F001 fixture: every way of calling a legacy solver entry point
+from outside src/repro. NEVER imported — parsed by the lint tests only."""
+import jax
+
+from repro.core import baselines, dsvrg, sodm
+from repro.core.sodm import solve as sodm_solve
+
+KEY = jax.random.PRNGKey(0)
+
+
+def train(spec, x, y, params, cfg):
+    res = sodm.solve(spec, x, y, params, cfg, KEY)          # F001
+    res2 = dsvrg.solve(x, y, params, cfg.dsvrg, KEY)        # F001
+    res3 = baselines.cascade_solve(spec, x, y, params, cfg) # F001
+    res4 = sodm_solve(spec, x, y, params, cfg, KEY)         # F001 (direct import)
+    return res, res2, res3, res4

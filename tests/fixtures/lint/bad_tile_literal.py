@@ -1,0 +1,14 @@
+"""Seeded T001 fixture: call-site tile/step literals that belong in a
+config dataclass. NEVER imported — parsed by the lint tests only."""
+from repro.core.sodm import SODMConfig
+from repro.kernels import ops
+
+
+def score_everything(x, z, coef, spec):
+    # these two knobs are hardcoded at the call site: T001 twice
+    return ops.decision_scores(x, z, coef, spec, bt=512, bs=512)
+
+
+def config_is_the_right_place():
+    # the same numbers inside a config constructor are FINE (exempt)
+    return SODMConfig(block=512)

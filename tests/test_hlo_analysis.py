@@ -112,6 +112,159 @@ ENTRY %main (a: f32[8]) -> f32[8] {
         assert stats.count_by_kind["all-gather"] == 5
 
 
+class TestEntryName:
+    def test_dotted_and_prefixed_names(self):
+        assert ha._entry_name("ENTRY %main.42 (a: f32[4]) -> f32[4] {") \
+            == "main.42"
+        assert ha._entry_name("ENTRY main (a: f32[4]) -> f32[4] {") == "main"
+        assert ha._entry_name("HloModule m\n\nENTRY %jit_f.7 (x) -> f32 {") \
+            == "jit_f.7"
+
+    def test_missing_entry_returns_none(self):
+        assert ha._entry_name("%helper (p: f32[4]) -> f32[4] {") is None
+
+    def test_missing_entry_falls_back_to_whole_text(self):
+        """Without an ENTRY header the whole text is one computation and
+        top-level collectives still count (multiplicity 1)."""
+        hlo = ("%ar = f32[8]{0} all-reduce(%a), channel_id=1, "
+               "replica_groups=[1,8]<=[8], to_apply=%add\n")
+        stats = ha.collective_bytes(hlo)
+        assert stats.count_by_kind["all-reduce"] == 1
+        assert stats.bytes_by_kind["all-reduce"] == pytest.approx(56.0)
+
+
+class TestGroupSize:
+    def test_strided_form(self):
+        assert ha._group_size("... replica_groups=[2,4]<=[8] ...") == 4
+
+    def test_explicit_group_list(self):
+        assert ha._group_size("... replica_groups={{0,1},{2,3}} ...") == 2
+        assert ha._group_size("... replica_groups={{0,1,2,3}} ...") == 4
+
+    def test_default_when_absent(self):
+        assert ha._group_size("%ag = f32[8] all-gather(%x)") == 2
+
+
+_NESTED_WHILE_HLO = """HloModule nested
+
+%icond (p: (s32[], f32[8])) -> pred[] {
+  %p = (s32[], f32[8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %k = s32[] constant(4)
+  ROOT %lt = pred[] compare(%i, %k), direction=LT
+}
+
+%ibody (p: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %p = (s32[], f32[8]) parameter(0)
+  %x = f32[8] get-tuple-element(%p), index=1
+  %ar = f32[8]{0} all-reduce(%x), channel_id=1, replica_groups=[1,8]<=[8], to_apply=%add
+  %i = s32[] get-tuple-element(%p), index=0
+  ROOT %t = (s32[], f32[8]) tuple(%i, %ar)
+}
+
+%ocond (p: (s32[], f32[8])) -> pred[] {
+  %p = (s32[], f32[8]) parameter(0)
+  %j = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(3)
+  ROOT %lt = pred[] compare(%j, %n), direction=LT
+}
+
+%obody (p: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %p = (s32[], f32[8]) parameter(0)
+  %w = (s32[], f32[8]) while(%p), condition=%icond, body=%ibody
+  ROOT %t = (s32[], f32[8]) tuple(%w)
+}
+
+ENTRY %main (a: f32[8]) -> f32[8] {
+  %a = f32[8] parameter(0)
+  %w = (s32[], f32[8]) while(%init), condition=%ocond, body=%obody
+  ROOT %r = f32[8] get-tuple-element(%w), index=1
+}
+"""
+
+
+class TestMultiplicity:
+    def test_nested_while_multiplies(self):
+        """Outer 3 trips x inner 4 trips = 12 executions of the inner
+        body's all-reduce."""
+        stats = ha.collective_bytes(_NESTED_WHILE_HLO)
+        assert stats.count_by_kind["all-reduce"] == 12
+        # 32B result, g=8 -> 2*32*7/8 = 56 per execution
+        assert stats.bytes_by_kind["all-reduce"] == pytest.approx(12 * 56.0)
+
+    def test_known_trip_count_annotation_wins(self):
+        """XLA's backend_config trip annotation overrides the parsed
+        compare-constant (here deliberately different: 2 vs 9)."""
+        hlo = """HloModule annotated
+
+%cond (p: (s32[], f32[8])) -> pred[] {
+  %p = (s32[], f32[8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %k = s32[] constant(2)
+  ROOT %lt = pred[] compare(%i, %k), direction=LT
+}
+
+%body (p: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %p = (s32[], f32[8]) parameter(0)
+  %x = f32[8] get-tuple-element(%p), index=1
+  %ag = f32[32]{0} all-gather(%x), channel_id=1, replica_groups=[2,4]<=[8], dimensions={0}
+  %i = s32[] get-tuple-element(%p), index=0
+  ROOT %t = (s32[], f32[8]) tuple(%i, %x)
+}
+
+ENTRY %main (a: f32[8]) -> f32[8] {
+  %a = f32[8] parameter(0)
+  %w = (s32[], f32[8]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"9"}}
+  ROOT %r = f32[8] get-tuple-element(%w), index=1
+}
+"""
+        stats = ha.collective_bytes(hlo)
+        assert stats.count_by_kind["all-gather"] == 9
+        assert stats.bytes_by_kind["all-gather"] == \
+            pytest.approx(9 * 128 * 3 / 4)
+
+    def test_called_computation_inherits_caller_count(self):
+        """A collective inside a computation reached via to_apply= is
+        charged once per call site (twice here)."""
+        hlo = """HloModule called
+
+%helper (p: f32[8]) -> f32[8] {
+  %p = f32[8] parameter(0)
+  ROOT %ar = f32[8]{0} all-reduce(%p), channel_id=1, replica_groups=[1,8]<=[8], to_apply=%add
+}
+
+ENTRY %main (a: f32[8]) -> f32[8] {
+  %a = f32[8] parameter(0)
+  %c1 = f32[8] call(%a), to_apply=%helper
+  %c2 = f32[8] call(%c1), to_apply=%helper
+  ROOT %r = f32[8] add(%c1, %c2)
+}
+"""
+        stats = ha.collective_bytes(hlo)
+        assert stats.count_by_kind["all-reduce"] == 2
+        assert stats.bytes_by_kind["all-reduce"] == pytest.approx(2 * 56.0)
+
+    def test_count_by_kind_attribution(self):
+        """Mixed kinds attribute independently: explicit-group all-gather
+        (g=2) at entry + permute, with per-kind byte accounting."""
+        hlo = """HloModule mixed
+
+ENTRY %main (a: f32[8]) -> f32[16] {
+  %a = f32[8] parameter(0)
+  %ag = f32[16]{0} all-gather(%a), channel_id=1, replica_groups={{0,1},{2,3}}, dimensions={0}
+  %cp = f32[8]{0} collective-permute(%a), channel_id=2, source_target_pairs={{0,1},{1,0}}
+  ROOT %r = f32[16] add(%ag, %ag)
+}
+"""
+        stats = ha.collective_bytes(hlo)
+        assert stats.count_by_kind == {"all-gather": 1,
+                                       "collective-permute": 1}
+        # all-gather: 64B result, g=2 -> 32; permute: full 32B payload
+        assert stats.bytes_by_kind["all-gather"] == pytest.approx(32.0)
+        assert stats.bytes_by_kind["collective-permute"] == \
+            pytest.approx(32.0)
+
+
 class TestRoofline:
     def test_terms_and_dominance(self):
         rl = ha.roofline(197e12, 819e9, 0.0)      # 1s compute, 1s memory
