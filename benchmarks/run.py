@@ -2,9 +2,26 @@
 roofline aggregation. Prints CSV-ish lines; `python -m benchmarks.run`.
 
 Select subsets: `python -m benchmarks.run table2 fig4`.
+Flags: `--quick` routes each bench through its toy-scale path;
+`--out-dir DIR` additionally persists one ``BENCH_<name>.json`` per bench
+(schema below) so CI runs leave a machine-readable trail instead of only
+scrollback.
+
+Persisted schema (schema_version 1):
+
+    {"schema_version": 1, "bench": "<name>", "device_kind": "...",
+     "backend": "cpu|gpu|tpu", "jax_version": "...",
+     "wall_clock_s": 1.23, "peak_bytes": 0-or-device-peak,
+     "rows": <len(lines)>, "lines": ["table2,...", ...]}
+
+``peak_bytes`` comes from ``device.memory_stats()`` when the backend
+exposes it (TPU/GPU) and is 0 on backends that don't (CPU) — absent
+telemetry is not an error.
 """
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
 
@@ -23,20 +40,86 @@ ALL = {
     "serve": serve_bench.run,
 }
 
+# how each bench spells "toy scale" (run() signatures differ)
+_QUICK_KW = {
+    "table2": {"datasets": ["svmguide1"], "scale_factor": 0.1},
+    "table3": {"datasets": ["svmguide1"], "scale_factor": 0.1},
+    "fig2": {"quick": True},
+    "fig4": {"datasets": [("a7a", 0.01)]},
+    "kernels": {"quick": True},
+    "serve": {"quick": True},
+}
 
-def main() -> int:
-    picks = sys.argv[1:] or list(ALL)
+
+def _peak_bytes() -> int:
+    import jax
+    try:
+        stats = jax.local_devices()[0].memory_stats()
+    except Exception:
+        return 0
+    if not stats:
+        return 0
+    return int(stats.get("peak_bytes_in_use", stats.get("bytes_in_use", 0)))
+
+
+def _persist(out_dir: str, name: str, lines: list[str],
+             wall_s: float) -> str:
+    import jax
+    dev = jax.local_devices()[0]
+    record = {
+        "schema_version": 1,
+        "bench": name,
+        "device_kind": dev.device_kind,
+        "backend": dev.platform,
+        "jax_version": jax.__version__,
+        "wall_clock_s": round(wall_s, 4),
+        "peak_bytes": _peak_bytes(),
+        "rows": len(lines),
+        "lines": list(lines),
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(record, f, indent=1)
+        f.write("\n")
+    os.replace(tmp, path)
+    return path
+
+
+def main(argv: list[str] | None = None) -> int:
+    argv = sys.argv[1:] if argv is None else list(argv)
+    quick = False
+    out_dir = None
+    picks: list[str] = []
+    it = iter(argv)
+    for a in it:
+        if a == "--quick":
+            quick = True
+        elif a == "--out-dir":
+            out_dir = next(it, None)
+            if out_dir is None:
+                print("--out-dir needs a directory argument")
+                return 1
+        else:
+            picks.append(a)
+    picks = picks or list(ALL)
+
     out: list[str] = []
     for name in picks:
         if name not in ALL:
             print(f"unknown benchmark {name!r}; options: {list(ALL)}")
             return 1
+        kw = _QUICK_KW.get(name, {}) if quick else {}
         t0 = time.time()
         print(f"=== {name} ===", flush=True)
-        ALL[name](out)
+        ALL[name](out, **kw)
+        wall = time.time() - t0
         for line in out:
             print(line, flush=True)
-        print(f"=== {name} done in {time.time() - t0:.1f}s ===", flush=True)
+        if out_dir is not None:
+            print(f"wrote {_persist(out_dir, name, out, wall)}", flush=True)
+        print(f"=== {name} done in {wall:.1f}s ===", flush=True)
         out.clear()
     return 0
 

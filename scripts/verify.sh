@@ -6,6 +6,8 @@
 #   scripts/verify.sh tier1    # full tier-1 suite
 #   scripts/verify.sh lint     # repo-convention lint + the quick static
 #                              # analysis battery (tests/test_analysis.py)
+#   scripts/verify.sh chaos    # fault-injection battery only (the `chaos`
+#                              # marker: kill/resume + crash-window tests)
 #
 # Markers are registered in pytest.ini; tests/conftest.py also prepends
 # src/ to sys.path, but exporting PYTHONPATH here keeps subprocess-based
@@ -20,5 +22,6 @@ case "${1:-fast}" in
     python scripts/lint.py
     exec python -m pytest -x -q tests/test_analysis.py -m "not slow"
     ;;
-  *) echo "usage: $0 [fast|tier1|lint]" >&2; exit 2 ;;
+  chaos) exec python -m pytest -x -q -m chaos ;;
+  *) echo "usage: $0 [fast|tier1|lint|chaos]" >&2; exit 2 ;;
 esac

@@ -46,7 +46,7 @@ from repro.analysis import pallas_check as pc
 
 __all__ = [
     "Counter", "counter", "counters", "Invariant", "declare", "invariants",
-    "get", "verify", "verify_all", "count_pallas_calls",
+    "get", "verify", "verify_all", "count_pallas_calls", "COMPONENTS",
 ]
 
 
@@ -119,16 +119,21 @@ class Invariant:
 
     name: str
     subject: str
-    kind: str                      # "kernel" | "route"
+    kind: str                      # "kernel" | "route" | "component"
     description: str
     verify: Callable[[], object] = dataclasses.field(compare=False)
     slow: bool = False
 
     def __post_init__(self):
-        if self.kind not in ("kernel", "route"):
-            raise ValueError(f"kind must be 'kernel' or 'route', "
-                             f"got {self.kind!r}")
+        if self.kind not in ("kernel", "route", "component"):
+            raise ValueError(f"kind must be 'kernel', 'route' or "
+                             f"'component', got {self.kind!r}")
 
+
+#: fault-tolerance / observability components under the PR 6 meta-coverage
+#: rule: each must carry >= 1 ``kind="component"`` declaration (asserted by
+#: tests/test_analysis.py alongside the kernel and route coverage)
+COMPONENTS = ("checkpoint", "faults", "resume", "tracker")
 
 _REGISTRY: dict[str, Invariant] = {}
 
@@ -517,6 +522,204 @@ def _dsvrg_sharded_gather_hoisted():
 
 
 # ---------------------------------------------------------------------------
+# component invariants (fault tolerance + observability, ISSUE 7)
+# ---------------------------------------------------------------------------
+
+def _faults_deterministic_replay():
+    """The same FaultPlan spec against the same loop fires at the same
+    site every time; kill rules raise Preemption, delay rules return (and
+    with sleeper=None never wall-sleep) their seconds, and every rule is
+    spent after its count."""
+    from repro.distributed import faults as fm
+
+    def drive(plan):
+        visited = []
+        try:
+            for lvl in (3, 2, 1, 0):
+                plan.site("cascade.level", level=lvl, K=2 ** lvl)
+                visited.append(lvl)
+        except fm.Preemption as e:
+            visited.append(("kill", e.info["level"]))
+        return visited
+
+    a = drive(fm.FaultPlan().kill_at_level(1))
+    b = drive(fm.FaultPlan().kill_at_level(1))
+    if not (a == b == [3, 2, ("kill", 1)]):
+        raise jl.InvariantViolation(
+            f"fault replay is not deterministic: {a} vs {b}")
+    plan = fm.FaultPlan(sleeper=None).delay_partition(2, 0.5)
+    got = (plan.site("cascade.partition", partition=1),
+           plan.site("cascade.partition", partition=2),
+           plan.site("cascade.partition", partition=2))
+    if got != (0.0, 0.5, 0.0):
+        raise jl.InvariantViolation(
+            f"delay rule mis-fired or was not spent: {got}")
+    if plan.fired != [("delay", "cascade.partition", {"partition": 2})]:
+        raise jl.InvariantViolation(f"fired log wrong: {plan.fired}")
+    return "faults: deterministic replay, counts spend, virtual delays"
+
+
+def _checkpoint_crash_window():
+    """A kill between the fsync'd temp write and the atomic rename never
+    disturbs the previously committed step, and the orphaned temp dir is
+    garbage-collected by the next save."""
+    import os
+    import tempfile
+    from repro.distributed import checkpoint as ck
+    from repro.distributed import faults as fm
+
+    with tempfile.TemporaryDirectory() as d:
+        plan = fm.FaultPlan()
+        mgr = ck.CheckpointManager(d, keep=3, faults=plan)
+        mgr.save(1, {"a": jnp.arange(4.0)})
+        plan.kill_mid_checkpoint()   # arm AFTER step 1 committed
+        try:
+            mgr.save(2, {"a": jnp.arange(4.0) + 1.0})
+        except fm.Preemption:
+            pass
+        else:
+            raise jl.InvariantViolation("kill_mid_checkpoint did not fire")
+        if mgr.latest_step() != 1:
+            raise jl.InvariantViolation(
+                f"crash window corrupted the committed step: "
+                f"latest={mgr.latest_step()}")
+        back = mgr.restore({"a": jnp.zeros(4)})
+        assert jnp.array_equal(back["a"], jnp.arange(4.0))
+        orphans = [n for n in os.listdir(d) if ".tmp." in n]
+        if not orphans:
+            raise jl.InvariantViolation(
+                "the killed writer left no orphan — the site is not in "
+                "the crash window")
+        mgr.save(2, {"a": jnp.arange(4.0) + 1.0})
+        left = [n for n in os.listdir(d) if ".tmp." in n]
+        if left:
+            raise jl.InvariantViolation(f"orphans survived _gc: {left}")
+    return "checkpoint: crash window safe, orphan GC'd on next save"
+
+
+def _resume_cascade_bit_identical():
+    """ISSUE 7 acceptance: kill the driver mid-cascade; fit(resume=)
+    returns a bit-identical result with fewer level solves than a cold
+    restart."""
+    import tempfile
+
+    import numpy as np
+
+    from repro.api import ODMEstimator, ProblemSpec
+    from repro.core import kernel_fns as kf
+    from repro.core import sodm
+    from repro.distributed import faults as fm
+
+    x, y = _toy_data(32, 4)
+    problem = ProblemSpec(kernel=kf.KernelSpec(name="rbf", gamma=0.5))
+    cfg = _route_cfg("sodm")                     # levels=2 -> 3 solves
+    key = jax.random.PRNGKey(0)
+    _, base = ODMEstimator(problem, route="sodm", cfg=cfg).fit(x, y, key)
+    with tempfile.TemporaryDirectory() as d:
+        try:
+            ODMEstimator(problem, route="sodm", cfg=cfg).fit(
+                x, y, key, resume=d, faults=fm.FaultPlan().kill_at_level(1))
+        except fm.Preemption:
+            pass
+        else:
+            raise jl.InvariantViolation("kill_at_level(1) did not fire")
+        c0 = sodm.level_solve_count()
+        _, resumed = ODMEstimator(problem, route="sodm", cfg=cfg).fit(
+            x, y, key, resume=d)
+        ran = sodm.level_solve_count() - c0
+    cold = cfg.levels + 1
+    if ran >= cold:
+        raise jl.InvariantViolation(
+            f"resume re-ran {ran} level solves, not fewer than the cold "
+            f"restart's {cold}")
+    if not np.array_equal(np.asarray(resumed.raw.alpha),
+                          np.asarray(base.raw.alpha)):
+        raise jl.InvariantViolation("resumed duals differ bitwise")
+    return f"resume(cascade): bit-identical, {ran} < {cold} level solves"
+
+
+def _resume_dsvrg_segments():
+    """The dsvrg route checkpoints (w, epoch) between scan segments; a
+    killed-and-resumed solve is bit-identical to the uninterrupted
+    segmented run."""
+    import dataclasses as dc
+    import tempfile
+
+    import numpy as np
+
+    from repro.api import ODMEstimator, ProblemSpec
+    from repro.core import kernel_fns as kf
+    from repro.distributed import faults as fm
+
+    x, y = _toy_data(32, 4)
+    problem = ProblemSpec(kernel=kf.KernelSpec(name="linear"))
+    cfg = _route_cfg("dsvrg")
+    cfg = dc.replace(cfg, dsvrg=dc.replace(cfg.dsvrg, epochs=4))
+    key = jax.random.PRNGKey(0)
+    with tempfile.TemporaryDirectory() as d1, \
+            tempfile.TemporaryDirectory() as d2:
+        model_a, _ = ODMEstimator(problem, route="dsvrg", cfg=cfg).fit(
+            x, y, key, resume=d1)
+        try:
+            ODMEstimator(problem, route="dsvrg", cfg=cfg).fit(
+                x, y, key, resume=d2, faults=fm.FaultPlan().kill_at_epoch(2))
+        except fm.Preemption:
+            pass
+        else:
+            raise jl.InvariantViolation("kill_at_epoch(2) did not fire")
+        model_b, _ = ODMEstimator(problem, route="dsvrg", cfg=cfg).fit(
+            x, y, key, resume=d2)
+    if not np.array_equal(np.asarray(model_a.w), np.asarray(model_b.w)):
+        raise jl.InvariantViolation(
+            "resumed dsvrg iterate differs bitwise from the "
+            "uninterrupted segmented run")
+    return "resume(dsvrg): killed+resumed w bitwise == uninterrupted"
+
+
+def _tracker_level_stream():
+    """The tracker protocol receives one record per cascade level (with
+    KKT / sweeps / SV-count / throughput) plus a final fit summary, and
+    the jsonl backend round-trips the stream, tolerating a torn tail
+    line from a killed writer."""
+    import os
+    import tempfile
+
+    from repro import observe
+    from repro.api import ODMEstimator, ProblemSpec
+    from repro.core import kernel_fns as kf
+
+    x, y = _toy_data(32, 4)
+    problem = ProblemSpec(kernel=kf.KernelSpec(name="rbf", gamma=0.5))
+    cfg = _route_cfg("sodm")
+    mem = observe.InMemoryTracker()
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "metrics.jsonl")
+        tracker = observe.CompositeTracker(
+            [mem, observe.JsonlTracker(path)])
+        ODMEstimator(problem, route="sodm", cfg=cfg).fit(
+            x, y, jax.random.PRNGKey(0), tracker=tracker)
+        with open(path, "a") as f:
+            f.write('{"step": 99, "torn')       # killed mid-line
+        records = observe.read_jsonl(path)
+    levels = [m for _, m in mem.steps if "level" in m]
+    if len(levels) != cfg.levels + 1:
+        raise jl.InvariantViolation(
+            f"expected {cfg.levels + 1} per-level records, got "
+            f"{len(levels)}")
+    need = {"level", "kkt", "sweeps", "sv_count", "rows_per_s"}
+    missing = need - set(levels[0])
+    if missing:
+        raise jl.InvariantViolation(f"level record missing {missing}")
+    if not mem.latest().get("fit_done"):
+        raise jl.InvariantViolation("no final fit summary was logged")
+    if len(records) != len(mem.steps):
+        raise jl.InvariantViolation(
+            f"jsonl round trip lost records ({len(records)} vs "
+            f"{len(mem.steps)}) or kept the torn line")
+    return "tracker: per-level stream + summary, torn-tail-safe jsonl"
+
+
+# ---------------------------------------------------------------------------
 # declarations
 # ---------------------------------------------------------------------------
 
@@ -594,6 +797,29 @@ def _declare_builtins() -> None:
                     "HLO is epoch-count-invariant (hoisted above the "
                     "scan)",
         verify=_dsvrg_sharded_gather_hoisted))
+
+    comp = [
+        ("components.faults.deterministic_replay", "faults",
+         "fault plans replay deterministically; kills raise, delays "
+         "return seconds, counts spend", _faults_deterministic_replay),
+        ("components.checkpoint.crash_window", "checkpoint",
+         "a kill in the write/rename window keeps the previous step "
+         "loadable and the orphan is GC'd on the next save",
+         _checkpoint_crash_window),
+        ("components.resume.cascade_bit_identical", "resume",
+         "kill-mid-cascade + fit(resume=) is bit-identical with fewer "
+         "level solves than a cold restart",
+         _resume_cascade_bit_identical),
+        ("components.resume.dsvrg_segments", "resume",
+         "dsvrg segment checkpoints make killed+resumed bitwise equal "
+         "to the uninterrupted segmented run", _resume_dsvrg_segments),
+        ("components.tracker.level_stream", "tracker",
+         "per-level KKT/sweeps/SV/throughput records + fit summary; "
+         "jsonl backend is torn-tail-safe", _tracker_level_stream),
+    ]
+    for name, subject, desc, fn in comp:
+        declare(Invariant(name=name, subject=subject, kind="component",
+                          description=desc, verify=fn))
 
 
 _declare_builtins()

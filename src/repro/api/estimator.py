@@ -32,6 +32,7 @@ from repro.api.spec import ProblemSpec
 from repro.core import kernel_fns as kf
 from repro.core import odm as odm_mod
 from repro.core.sodm import SODMConfig
+from repro.observe import profile_ctx
 from repro.serve import model as serve_model
 
 Array = jax.Array
@@ -81,30 +82,69 @@ class ODMEstimator:
 
     # -- training -----------------------------------------------------------
 
-    def fit(self, x: Array, y: Array, key: jax.Array | None = None,
+    #: routes with a resume/faults/tracker seam (the paper's two regimes;
+    #: the Section-4 baselines have no mid-solve state worth persisting)
+    INSTRUMENTED_ROUTES = ("dsvrg", "sodm")
+
+    def fit(self, x: Array, y: Array, key: jax.Array | None = None, *,
+            resume=None, faults=None, tracker=None, profile_dir=None,
             **fit_kw) -> tuple[serve_model.FittedODM, FitReport]:
         """Train through the resolved route; returns (artifact, report).
 
-        ``fit_kw`` forwards route-specific hooks (currently
-        ``level_callback`` for the single-process sodm route's per-level
-        checkpointing; routes ignore hooks they have no seam for).
+        Preemption-proofing and observability (sodm / dsvrg routes only —
+        other routes raise rather than silently ignore these):
+
+        resume: a directory (or :class:`repro.distributed.resume
+            .ResumeConfig`) holding mid-solve checkpoints. A fresh
+            directory is populated as the solve progresses (per cascade
+            level / per DSVRG epoch segment); a directory left behind by
+            a preempted fit restarts at the first unsolved level, and the
+            result is bit-identical to an uninterrupted run. Provenance
+            (kernel/params/cfg/data/key) is fingerprinted — resuming
+            against a different problem raises.
+        faults: a :class:`repro.distributed.faults.FaultPlan` for
+            deterministic chaos testing (kill-at-level-k,
+            kill-mid-checkpoint, ...).
+        tracker: anything with ``log_metrics(step, dict)`` (see
+            :mod:`repro.observe`); receives per-level / per-segment
+            training metrics plus one final fit summary.
+        profile_dir: write a JAX profiler trace of the solve there.
+
+        Remaining ``fit_kw`` forward route-specific hooks (currently
+        ``level_callback`` for the sodm route's legacy per-level
+        checkpointing seam).
         """
         x, y = self.problem.validate(x, y)
         key = jax.random.PRNGKey(0) if key is None else key
         M = int(x.shape[0])
         entry = registry.resolve(self.problem, M, mesh=self.mesh,
                                  route=self.route, cfg=self.cfg)
+        if entry.name not in self.INSTRUMENTED_ROUTES:
+            bad = [n for n, v in (("resume", resume), ("faults", faults),
+                                  ("tracker", tracker)) if v is not None]
+            if bad:
+                raise ValueError(
+                    f"route {entry.name!r} has no {'/'.join(bad)} seam — "
+                    f"instrumented routes: {list(self.INSTRUMENTED_ROUTES)}")
+        if resume is not None:
+            fit_kw["resume"] = self._resume_manager(entry.name, resume,
+                                                    x, y, key, faults)
+        if faults is not None:
+            fit_kw["faults"] = faults
+        if tracker is not None:
+            fit_kw["tracker"] = tracker
         # the schedule-upgrade rule only applies to AUTO dsvrg dispatch
         # (an explicit choice keeps whatever cfg.dsvrg says)
         auto = (entry.name == "dsvrg" and self.route is None
                 and self.cfg.engine != "dsvrg")
         t0 = time.perf_counter()
-        out = entry.fit(self.problem, x, y, key, cfg=self.cfg,
-                        mesh=self.mesh, data_axis=self.data_axis,
-                        auto=auto, compile_kw=dict(self.compile_kw),
-                        fit_kw=fit_kw)
-        jax.block_until_ready(
-            out.model.w if out.model.w is not None else out.model.coef)
+        with profile_ctx(profile_dir):
+            out = entry.fit(self.problem, x, y, key, cfg=self.cfg,
+                            mesh=self.mesh, data_axis=self.data_axis,
+                            auto=auto, compile_kw=dict(self.compile_kw),
+                            fit_kw=fit_kw)
+            jax.block_until_ready(
+                out.model.w if out.model.w is not None else out.model.coef)
         wall = time.perf_counter() - t0
         report = FitReport(
             route=entry.name, engine=out.engine, algorithm=entry.algorithm,
@@ -112,8 +152,30 @@ class ODMEstimator:
             compression=out.model.compression, wall_clock=wall,
             passes=out.passes, kkt=out.kkt, eta=out.eta,
             history=out.history, gap=out.model.gap, raw=out.raw)
+        if tracker is not None:
+            final = out.passes[0] if entry.name == "dsvrg" \
+                else len(out.passes)
+            tracker.log_metrics(final, {
+                "route": entry.name, "engine": out.engine, "fit_done": True,
+                "n_train": M, "n_sv": out.model.n_sv, "kkt": out.kkt,
+                "wall_clock": wall,
+                "rows_per_s": M / max(wall, 1e-9)})
         self.model_, self.report_ = out.model, report
         return out.model, report
+
+    def _resume_manager(self, route: str, resume, x: Array, y: Array,
+                        key: jax.Array, faults):
+        """Build the route's resume manager, fingerprinting THIS fit's
+        (kernel, params, cfg, data, key) so a stale directory is rejected
+        instead of splicing foreign duals into the solve."""
+        from repro.distributed import resume as resume_mod
+        rc = resume_mod.ResumeConfig.of(resume)
+        prov = resume_mod.provenance(self.problem.kernel,
+                                     self.problem.params, self.cfg,
+                                     x, y, key)
+        cls = (resume_mod.DsvrgResumeManager if route == "dsvrg"
+               else resume_mod.CascadeResumeManager)
+        return cls(rc, prov, faults=faults)
 
     # -- scoring ------------------------------------------------------------
 

@@ -243,16 +243,26 @@ def _pin_level_engine(cfg, route: str):
     return cfg
 
 
+def _hooks(fit_kw) -> dict:
+    """The preemption/observability seams every instrumented route takes
+    (repro.distributed.faults / repro.observe / repro.distributed.resume),
+    forwarded from ``ODMEstimator.fit(faults=, tracker=, resume=)``."""
+    return {k: fit_kw[k] for k in ("faults", "tracker", "resume")
+            if fit_kw.get(k) is not None}
+
+
 def _fit_sodm(problem, x, y, key, *, cfg, mesh, data_axis, auto,
               compile_kw, fit_kw) -> RouteOutput:
     del auto
     cfg = _pin_level_engine(cfg, "sodm")
     if mesh is None:
         res = sodm_mod._solve(problem.kernel, x, y, problem.params, cfg,
-                              key, fit_kw.get("level_callback"))
+                              key, fit_kw.get("level_callback"),
+                              **_hooks(fit_kw))
     else:
         res = sodm_mod._solve_sharded(problem.kernel, x, y, problem.params,
-                                      cfg, key, mesh, data_axis=data_axis)
+                                      cfg, key, mesh, data_axis=data_axis,
+                                      **_hooks(fit_kw))
     model = serve_model.from_sodm(problem.kernel, res, x, y, **compile_kw)
     return RouteOutput(model=model, raw=res, engine=cfg.engine,
                        passes=tuple(res.sweeps_per_level),
@@ -261,10 +271,10 @@ def _fit_sodm(problem, x, y, key, *, cfg, mesh, data_axis, auto,
 
 def _fit_dsvrg(problem, x, y, key, *, cfg, mesh, data_axis, auto,
                compile_kw, fit_kw) -> RouteOutput:
-    del fit_kw
     res, dres = sodm_mod._solve_dsvrg(problem.kernel, x, y, problem.params,
                                       cfg, key, mesh=mesh,
-                                      data_axis=data_axis, auto=auto)
+                                      data_axis=data_axis, auto=auto,
+                                      **_hooks(fit_kw))
     # the artifact comes straight from the primal w (born compressed, and
     # bit-identical to a direct dsvrg.solve consumer's model); the
     # recovered-dual SODMResult rides along as the stationarity check

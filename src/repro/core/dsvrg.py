@@ -52,6 +52,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import NamedTuple
 
 import jax
@@ -282,7 +283,8 @@ def solve(x: Array, y: Array, params: ODMParams, cfg: DSVRGConfig,
 
 
 def _solve(x: Array, y: Array, params: ODMParams, cfg: DSVRGConfig,
-           key: jax.Array, w0: Array | None = None) -> DSVRGResult:
+           key: jax.Array, w0: Array | None = None, *, faults=None,
+           tracker=None, resume=None) -> DSVRGResult:
     M, d = x.shape
     K = cfg.n_partitions
     if M % K != 0:
@@ -295,8 +297,71 @@ def _solve(x: Array, y: Array, params: ODMParams, cfg: DSVRGConfig,
     xs, ys, wts = _pad_batches(xp.reshape(K, M // K, d),
                                yp.reshape(K, M // K), cfg.batch)
     w0 = jnp.zeros(d, x.dtype) if w0 is None else w0
-    w, hist, eta = _run(w0, xs, ys, wts, params=params, cfg=cfg, M=M)
+    if faults is None and tracker is None and resume is None:
+        w, hist, eta = _run(w0, xs, ys, wts, params=params, cfg=cfg, M=M)
+    else:
+        def runner(w, n):
+            return _run(w, xs, ys, wts, params=params,
+                        cfg=dataclasses.replace(cfg, epochs=n), M=M)
+
+        w, hist, eta = _segmented(runner, w0, cfg, M, perm=perm,
+                                  faults=faults, tracker=tracker,
+                                  resume=resume)
     return DSVRGResult(w=w, history=hist, perm=perm, eta=eta)
+
+
+# ---------------------------------------------------------------------------
+# segmented epoch driver (the instrumented / resumable path)
+# ---------------------------------------------------------------------------
+
+def _segmented(runner, w0: Array, cfg: DSVRGConfig, M: int, *, perm: Array,
+               faults=None, tracker=None, resume=None):
+    """Run ``cfg.epochs`` as checkpointable segments of the epoch scan.
+
+    ``runner(w, n) -> (w', hist_n, eta)`` executes ``n`` epochs from
+    iterate ``w`` (one jitted scan per distinct segment length — the
+    default single-scan path and its trace-once pin are untouched; this
+    driver only exists when faults/tracker/resume are requested). SVRG
+    re-anchors at every epoch start, so the iterate ``w`` alone restarts
+    the next epoch exactly and splitting the scan never changes the math:
+    a resumed run and an uninterrupted run of this driver are
+    bit-identical by construction.
+
+    Between segments: the ``"dsvrg.segment"`` fault site fires, the
+    tracker logs ``(epoch, objective, throughput)``, and the resume
+    manager checkpoints ``{w, history, perm} + {epoch, eta}`` (the
+    ``(w, anchor, epoch)`` of the module docs — anchor coincides with
+    ``w`` at the boundary).
+    """
+    w, done, hist = w0, 0, None
+    eta = jnp.zeros((), w0.dtype)
+    seg = resume.segment if resume is not None else 1
+    if resume is not None:
+        restored = resume.restore()
+        if restored is not None:
+            w, done, hist = restored.w, restored.epoch, restored.history
+            eta = jnp.asarray(restored.eta, w.dtype)
+    while done < cfg.epochs:
+        if faults is not None:
+            faults.site("dsvrg.segment", epoch=done)
+        n = min(seg, cfg.epochs - done)
+        t0 = time.perf_counter()
+        w, h, eta = runner(w, n)
+        hist = h if hist is None else jnp.concatenate([hist, h])
+        done += n
+        if tracker is not None:
+            jax.block_until_ready(w)
+            wall = time.perf_counter() - t0
+            tracker.log_metrics(done, {
+                "route": "dsvrg", "epoch": done,
+                "objective": float(h[-1]), "eta": float(eta),
+                "wall_s": wall, "rows_per_s": n * M / max(wall, 1e-9)})
+        if resume is not None:
+            resume.save_segment(epoch=done, w=w, history=hist, perm=perm,
+                                eta=eta)
+    if hist is None:                   # epochs == 0 and nothing restored
+        hist = jnp.zeros((0,), w.dtype)
+    return w, hist, eta
 
 
 # ---------------------------------------------------------------------------
@@ -449,7 +514,8 @@ def solve_sharded(x: Array, y: Array, params: ODMParams, cfg: DSVRGConfig,
 def _solve_sharded(x: Array, y: Array, params: ODMParams, cfg: DSVRGConfig,
                    key: jax.Array, mesh: jax.sharding.Mesh,
                    data_axis: str = "data",
-                   w0: Array | None = None) -> DSVRGResult:
+                   w0: Array | None = None, *, faults=None, tracker=None,
+                   resume=None) -> DSVRGResult:
     M, d = x.shape
     K = cfg.n_partitions
     n_dev = mesh.shape[data_axis]
@@ -465,7 +531,18 @@ def _solve_sharded(x: Array, y: Array, params: ODMParams, cfg: DSVRGConfig,
     xs, ys, wts = _pad_batches(xp.reshape(K, M // K, d),
                                yp.reshape(K, M // K), cfg.batch)
 
-    run = _make_sharded_run(mesh, params, cfg, M, data_axis)
     w0 = jnp.zeros(d, x.dtype) if w0 is None else w0
-    w, hist, eta = run(w0, xs, ys, wts)
+    if faults is None and tracker is None and resume is None:
+        run = _make_sharded_run(mesh, params, cfg, M, data_axis)
+        w, hist, eta = run(w0, xs, ys, wts)
+    else:
+        def runner(w, n):
+            run = _make_sharded_run(mesh, params,
+                                    dataclasses.replace(cfg, epochs=n),
+                                    M, data_axis)
+            return run(w, xs, ys, wts)
+
+        w, hist, eta = _segmented(runner, w0, cfg, M, perm=perm,
+                                  faults=faults, tracker=tracker,
+                                  resume=resume)
     return DSVRGResult(w=w, history=hist, perm=perm, eta=eta)

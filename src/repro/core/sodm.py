@@ -82,6 +82,7 @@ tolerance (see repro.distributed.checkpoint).
 from __future__ import annotations
 
 import dataclasses
+import time
 from functools import partial
 from typing import Callable, NamedTuple
 
@@ -164,7 +165,8 @@ def split_to_partitions(alpha: Array, K: int) -> Array:
 def _solve_dsvrg(spec: kf.KernelSpec, x: Array, y: Array, params: ODMParams,
                  cfg: SODMConfig, key: jax.Array,
                  mesh: jax.sharding.Mesh | None = None,
-                 data_axis: str = "data", auto: bool = False,
+                 data_axis: str = "data", auto: bool = False, *,
+                 faults=None, tracker=None, resume=None,
                  ) -> tuple[SODMResult, dsvrg_mod.DSVRGResult]:
     """Whole-problem linear-kernel route (the registry's dsvrg entry).
 
@@ -201,9 +203,11 @@ def _solve_dsvrg(spec: kf.KernelSpec, x: Array, y: Array, params: ODMParams,
             n_landmarks=cfg.n_landmarks)
     if mesh is not None:
         res = dsvrg_mod._solve_sharded(x, y, params, dcfg, key, mesh,
-                                       data_axis=data_axis)
+                                       data_axis=data_axis, faults=faults,
+                                       tracker=tracker, resume=resume)
     else:
-        res = dsvrg_mod._solve(x, y, params, dcfg, key)
+        res = dsvrg_mod._solve(x, y, params, dcfg, key, faults=faults,
+                               tracker=tracker, resume=resume)
     xp, yp = x[res.perm], y[res.perm]
     alpha = odm_mod.alpha_from_w(res.w, xp, yp, params)
     # grad p(w) = w - w_from_alpha(alpha_from_w(w)) exactly (the recovered
@@ -212,6 +216,101 @@ def _solve_dsvrg(spec: kf.KernelSpec, x: Array, y: Array, params: ODMParams,
     kkt = jnp.max(jnp.abs(res.w - odm_mod.w_from_alpha(xp, yp, alpha)))
     return SODMResult(alpha=alpha, perm=res.perm, levels_run=1,
                       sweeps_per_level=[dcfg.epochs], kkt=kkt), res
+
+
+def _level_loop(run_level, x: Array, y: Array, perm: Array, cfg: SODMConfig,
+                *, faults=None, tracker=None, resume=None,
+                level_callback: Callable[[int, Array], None] | None = None,
+                ) -> SODMResult:
+    """The Algorithm-1 level loop, shared by the single-process and SPMD
+    drivers (``run_level(xs, ys, alphas, K) -> (alphas, sweeps, kkts)`` is
+    the only thing that differs between them).
+
+    Instrumentation seams, all default-off:
+
+    * ``faults`` — a :class:`repro.distributed.faults.FaultPlan`; the
+      ``"cascade.level"`` site fires BEFORE each level solve, so a kill at
+      level k leaves level k+1's checkpoint as the last committed state
+      and a resume restarts exactly the killed solve from the merged
+      level-(k+1) duals (Algorithm 1's warm start, recovered from disk).
+    * ``tracker`` — per-level KKT / sweeps / SV-count / throughput via
+      ``log_metrics(levels_solved, {...})`` (repro.observe).
+    * ``resume`` — a :class:`repro.distributed.resume
+      .CascadeResumeManager`; every solved level is checkpointed, and a
+      non-empty resume directory re-enters the loop at the first unsolved
+      level (the restored level is treated as already solved: straight to
+      the convergence check and merge). Level solves are deterministic
+      pure functions of ``(xs, ys, alphas)`` and the checkpoint round
+      trip is bitwise exact, so the resumed result is bit-identical to an
+      uninterrupted run's.
+    """
+    restored = resume.restore() if resume is not None else None
+    M = x.shape[0]
+    if restored is not None:
+        level, K, m = restored.level, restored.K, restored.m
+        alphas, perm = restored.alphas, restored.perm
+        sweeps_per_level = list(restored.sweeps_per_level)
+        kkt = restored.kkt
+        pending = False          # the restored level is already solved
+    else:
+        K = cfg.p ** cfg.levels
+        m = M // K
+        alphas = jnp.zeros((K, 2 * m), x.dtype)
+        sweeps_per_level = []
+        kkt = jnp.array(jnp.inf, x.dtype)
+        level = cfg.levels
+        pending = True
+    xp, yp = x[perm], y[perm]
+
+    while True:
+        if pending:
+            if faults is not None:
+                faults.site("cascade.level", level=level, K=K)
+            _LEVEL_SOLVE_COUNTER.bump((level, K))
+            t0 = time.perf_counter()
+            xs = xp.reshape(K, m, -1)
+            ys = yp.reshape(K, m)
+            alphas, sweeps, kkts = run_level(xs, ys, alphas, K)
+            sweeps_per_level.append(int(jnp.max(sweeps)))
+            kkt = jnp.max(kkts)
+            if tracker is not None:
+                jax.block_until_ready(alphas)
+                wall = time.perf_counter() - t0
+                sv = int(jnp.sum(jnp.abs(alphas[:, :m] - alphas[:, m:]) > 0))
+                tracker.log_metrics(len(sweeps_per_level), {
+                    "route": "sodm", "level": level, "K": K, "m": m,
+                    "sweeps": sweeps_per_level[-1], "kkt": float(kkt),
+                    "sv_count": sv, "wall_s": wall,
+                    "rows_per_s": M / max(wall, 1e-9)})
+            if resume is not None:
+                resume.save_level(level=level, K=K, m=m, alphas=alphas,
+                                  perm=perm,
+                                  sweeps_per_level=sweeps_per_level,
+                                  kkt=kkt)
+            if level_callback is not None:
+                level_callback(level, alphas)
+        pending = True
+        # Algorithm 1 line 5: if all local solves already satisfied the
+        # warm start (0 sweeps => init was within tol), we are converged.
+        converged = cfg.early_stop and sweeps_per_level \
+            and sweeps_per_level[-1] == 0 and level < cfg.levels
+        if K == 1 or level == 0 or converged:
+            break
+        # merge p siblings: (K, 2m) -> (K/p, 2pm), interleaving zeta/beta
+        # (plain concatenation, Algorithm 1 line 12 — the engine rescales
+        # the warm start to the parent's regularizer scale, see the
+        # module's scale note)
+        Kn = K // cfg.p
+        grouped = alphas.reshape(Kn, cfg.p, 2 * m)
+        alphas = jax.vmap(merge_alphas)(grouped)       # (Kn, 2 p m)
+        K, m = Kn, m * cfg.p
+        level -= 1
+
+    alpha = merge_alphas(alphas) if alphas.ndim == 2 and alphas.shape[0] > 1 \
+        else alphas.reshape(-1)
+    return SODMResult(alpha=alpha, perm=perm,
+                      levels_run=len(sweeps_per_level),
+                      sweeps_per_level=sweeps_per_level, kkt=kkt)
 
 
 def solve(spec: kf.KernelSpec, x: Array, y: Array, params: ODMParams,
@@ -231,10 +330,11 @@ def solve(spec: kf.KernelSpec, x: Array, y: Array, params: ODMParams,
 def _solve(spec: kf.KernelSpec, x: Array, y: Array, params: ODMParams,
            cfg: SODMConfig, key: jax.Array,
            level_callback: Callable[[int, Array], None] | None = None,
-           ) -> SODMResult:
+           *, faults=None, tracker=None, resume=None) -> SODMResult:
     M = x.shape[0]
     if engines.wants_dsvrg(cfg.engine, spec.name, M, cfg.dsvrg_threshold):
-        return _solve_dsvrg(spec, x, y, params, cfg, key)[0]
+        return _solve_dsvrg(spec, x, y, params, cfg, key, faults=faults,
+                            tracker=tracker, resume=resume)[0]
     K0 = cfg.p ** cfg.levels
     if M % K0 != 0:
         raise ValueError(f"p^L={K0} must divide M={M}")
@@ -251,51 +351,20 @@ def _solve(spec: kf.KernelSpec, x: Array, y: Array, params: ODMParams,
     else:
         raise ValueError(cfg.partition_strategy)
 
-    xp, yp = x[perm], y[perm]
-
-    K = K0
-    m = M // K
-    alphas = jnp.zeros((K, 2 * m), x.dtype)
-    sweeps_per_level: list = []
-    kkt = jnp.array(jnp.inf, x.dtype)
-
-    level = cfg.levels
     solver = engines.make_local_solver(cfg.engine, block=cfg.block,
                                        gram_threshold=cfg.gram_threshold,
                                        adaptive=cfg.adaptive)
     solve_jit = jax.jit(solver,
                         static_argnames=("spec", "params", "tol", "max_sweeps"))
-    while True:
-        xs = xp.reshape(K, m, -1)
-        ys = yp.reshape(K, m)
-        alphas, sweeps, kkts = solve_jit(xs, ys, alphas, spec=spec,
-                                         params=params, tol=cfg.tol,
-                                         max_sweeps=cfg.max_sweeps)
-        sweeps_per_level.append(int(jnp.max(sweeps)))
-        kkt = jnp.max(kkts)
-        if level_callback is not None:
-            level_callback(level, alphas)
-        # Algorithm 1 line 5: if all local solves already satisfied the
-        # warm start (0 sweeps => init was within tol), we are converged.
-        converged = cfg.early_stop and int(jnp.max(sweeps)) == 0 and level < cfg.levels
-        if K == 1 or level == 0 or converged:
-            break
-        # merge p siblings: (K, 2m) -> (K/p, 2pm), interleaving zeta/beta
-        # (plain concatenation, Algorithm 1 line 12 — the engine rescales
-        # the warm start to the parent's regularizer scale, see the
-        # module's scale note)
-        Kn = K // cfg.p
-        grouped = alphas.reshape(Kn, cfg.p, 2 * m)
-        merged = jax.vmap(merge_alphas)(grouped)       # (Kn, 2 p m)
-        alphas = merged
-        K, m = Kn, m * cfg.p
-        level -= 1
 
-    alpha = merge_alphas(alphas) if alphas.ndim == 2 and alphas.shape[0] > 1 \
-        else alphas.reshape(-1)
-    return SODMResult(alpha=alpha, perm=perm,
-                      levels_run=len(sweeps_per_level),
-                      sweeps_per_level=sweeps_per_level, kkt=kkt)
+    def run_level(xs, ys, alphas, K):
+        del K
+        return solve_jit(xs, ys, alphas, spec=spec, params=params,
+                         tol=cfg.tol, max_sweeps=cfg.max_sweeps)
+
+    return _level_loop(run_level, x, y, perm, cfg, faults=faults,
+                       tracker=tracker, resume=resume,
+                       level_callback=level_callback)
 
 
 # ---------------------------------------------------------------------------
@@ -325,15 +394,16 @@ def solve_sharded(spec: kf.KernelSpec, x: Array, y: Array, params: ODMParams,
 
 def _solve_sharded(spec: kf.KernelSpec, x: Array, y: Array,
                    params: ODMParams, cfg: SODMConfig, key: jax.Array,
-                   mesh: jax.sharding.Mesh,
-                   data_axis: str = "data") -> SODMResult:
+                   mesh: jax.sharding.Mesh, data_axis: str = "data",
+                   *, faults=None, tracker=None, resume=None) -> SODMResult:
     from jax.experimental.shard_map import shard_map
 
     M = x.shape[0]
     if engines.wants_dsvrg(cfg.engine, spec.name, M, cfg.dsvrg_threshold):
         return _solve_dsvrg(spec, x, y, params, cfg, key, mesh=mesh,
                             data_axis=data_axis,
-                            auto=cfg.engine != "dsvrg")[0]
+                            auto=cfg.engine != "dsvrg", faults=faults,
+                            tracker=tracker, resume=resume)[0]
     K0 = cfg.p ** cfg.levels
     n_dev = mesh.shape[data_axis]
     if K0 % n_dev != 0:
@@ -344,13 +414,6 @@ def _solve_sharded(spec: kf.KernelSpec, x: Array, y: Array,
         perm = plan.perm
     else:
         perm = part_mod.random_partitions(M, K0, key)
-    xp, yp = x[perm], y[perm]
-
-    K, m = K0, M // K0
-    alphas = jnp.zeros((K, 2 * m), x.dtype)
-    sweeps_per_level: list = []
-    kkt = jnp.array(jnp.inf, x.dtype)
-    level = cfg.levels
 
     solver = engines.make_local_solver(cfg.engine, block=cfg.block,
                                        gram_threshold=cfg.gram_threshold,
@@ -360,9 +423,7 @@ def _solve_sharded(spec: kf.KernelSpec, x: Array, y: Array,
     repl_jit = jax.jit(solver,
                       static_argnames=("spec", "params", "tol", "max_sweeps"))
 
-    while True:
-        xs = xp.reshape(K, m, -1)
-        ys = yp.reshape(K, m)
+    def run_level(xs, ys, alphas, K):
         if K >= n_dev and K % n_dev == 0 and n_dev > 1:
             # parallel phase: each device sweeps its own slab of partitions
             shmapped = shard_map(
@@ -374,30 +435,14 @@ def _solve_sharded(spec: kf.KernelSpec, x: Array, y: Array,
                 # this jax version; outputs are fully sharded anyway
                 check_rep=False,
             )
-            alphas, sweeps, kkts = jax.jit(shmapped)(xs, ys, alphas)
-        else:
-            # replicated tail: K < n_dev partitions left (tiny residual
-            # levels — a single in-memory QP by now)
-            alphas, sweeps, kkts = repl_jit(xs, ys, alphas, spec=spec,
-                                            params=params, tol=cfg.tol,
-                                            max_sweeps=cfg.max_sweeps)
-        sweeps_per_level.append(int(jnp.max(sweeps)))
-        kkt = jnp.max(kkts)
-        converged = cfg.early_stop and int(jnp.max(sweeps)) == 0 \
-            and level < cfg.levels
-        if K == 1 or converged:
-            break
-        Kn = K // cfg.p
-        grouped = alphas.reshape(Kn, cfg.p, 2 * m)
-        alphas = jax.vmap(merge_alphas)(grouped)
-        K, m = Kn, m * cfg.p
-        level -= 1
+            return jax.jit(shmapped)(xs, ys, alphas)
+        # replicated tail: K < n_dev partitions left (tiny residual
+        # levels — a single in-memory QP by now)
+        return repl_jit(xs, ys, alphas, spec=spec, params=params,
+                        tol=cfg.tol, max_sweeps=cfg.max_sweeps)
 
-    alpha = merge_alphas(alphas) if alphas.ndim == 2 and alphas.shape[0] > 1 \
-        else alphas.reshape(-1)
-    return SODMResult(alpha=alpha, perm=perm,
-                      levels_run=len(sweeps_per_level),
-                      sweeps_per_level=sweeps_per_level, kkt=kkt)
+    return _level_loop(run_level, x, y, perm, cfg, faults=faults,
+                       tracker=tracker, resume=resume)
 
 
 # ---------------------------------------------------------------------------
@@ -420,6 +465,19 @@ _MODEL_CACHE_CAP = 8
 from repro.analysis.invariants import counter as _inv_counter  # noqa: E402
 
 _PERM_GATHER_COUNTER = _inv_counter("sodm.perm_gather")
+
+# one bump per level solve actually run (restored levels do NOT bump);
+# the resume.cascade_fewer_solves invariant reads deltas of this to prove
+# a resumed fit re-runs only the not-yet-solved levels
+_LEVEL_SOLVE_COUNTER = _inv_counter("sodm.level_solve")
+
+
+def level_solve_count() -> int:
+    """How many cascade level solves have run in this process — resumed
+    fits skip restored levels, so the delta across a resume must be
+    smaller than a cold restart's (``resume.cascade_fewer_solves`` in
+    ``repro.analysis.invariants``)."""
+    return _LEVEL_SOLVE_COUNTER.count
 
 
 def perm_gather_count() -> int:

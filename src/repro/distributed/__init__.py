@@ -1,3 +1,3 @@
-from repro.distributed import checkpoint, elastic, straggler
+from repro.distributed import checkpoint, elastic, faults, resume, straggler
 
-__all__ = ["checkpoint", "elastic", "straggler"]
+__all__ = ["checkpoint", "elastic", "faults", "resume", "straggler"]

@@ -63,9 +63,13 @@ def _unflatten_into(template, flat: dict[str, Any]):
 
 
 class CheckpointManager:
-    def __init__(self, directory: str, keep: int = 3):
+    def __init__(self, directory: str, keep: int = 3, faults=None):
         self.dir = directory
         self.keep = keep
+        # fault-injection hook (repro.distributed.faults.FaultPlan): fires
+        # the "checkpoint.pre_rename" site inside the crash window — after
+        # the fsync'd temp write, before the atomic rename
+        self.faults = faults
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
@@ -131,6 +135,10 @@ class CheckpointManager:
             json.dump(manifest, f)
             f.flush()
             os.fsync(f.fileno())
+        if self.faults is not None:
+            # the crash window: a kill here leaves an orphaned tmp dir and
+            # must NOT disturb the previously committed step
+            self.faults.site("checkpoint.pre_rename", step=step)
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)
@@ -142,6 +150,15 @@ class CheckpointManager:
         for s in steps[:-self.keep] if self.keep > 0 else []:
             shutil.rmtree(os.path.join(self.dir, f"step_{s:010d}"),
                           ignore_errors=True)
+        # orphaned in-flight dirs left by a writer killed inside the crash
+        # window. Safe under the manager's one-write-in-flight discipline
+        # (_gc only runs after our own rename committed, so any tmp dir
+        # still present belongs to a dead writer); concurrent unmanaged
+        # writers to the same directory are not supported.
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and ".tmp." in name:
+                shutil.rmtree(os.path.join(self.dir, name),
+                              ignore_errors=True)
 
     # -- read ----------------------------------------------------------------
 

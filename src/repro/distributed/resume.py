@@ -1,0 +1,238 @@
+"""Mid-solve resume: per-level cascade checkpoints + DSVRG segments.
+
+A preempted ``ODMEstimator.fit`` used to restart from scratch — every
+already-solved cascade level thrown away. This module makes the solve
+state durable through :class:`repro.distributed.checkpoint
+.CheckpointManager` (atomic, versioned, retention-managed) so
+``fit(resume=dir)`` restarts a killed level-k solve from the merged
+level-(k−1) duals instead.
+
+File layout (one resume directory per fit)::
+
+    <dir>/step_0000000001/manifest.json   # after the 1st level solve
+                          arrays.npz      #   {alphas (K, 2m), perm (M,)}
+    <dir>/step_0000000002/...             # after the 2nd, and so on
+
+The manifest metadata carries everything the loop needs to re-enter at
+the right place — ``level``/``K``/``m``, the sweeps-per-level history,
+the running KKT residual — plus a **provenance** block fingerprinting
+(kernel, params, cfg, data, PRNG key). Restore refuses (or, with
+``strict=False``, warns and cold-starts) when the provenance does not
+match: resuming level-k duals against different data or a different
+partition key would silently train a wrong model.
+
+The DSVRG route checkpoints ``{w, history, perm}`` + ``{epoch, eta}``
+between scan segments (the anchor coincides with ``w`` at every epoch
+boundary, so ``w`` alone restarts the next epoch exactly).
+
+Checkpoint steps count *completed work* (levels solved / epochs run), so
+they are strictly increasing whatever direction the cascade's level
+index runs. All saves are synchronous: a cascade level is coarse-grained
+enough that async buys nothing, and a synchronous write is what lets the
+fault layer's kill-mid-checkpoint strike on the caller thread.
+
+Bit-identical guarantee (pinned by tests/test_resume.py and the
+``resume.*`` invariants): level solves are deterministic pure functions
+of ``(xs, ys, alphas)`` and the npz round trip is bitwise exact, so a
+resumed fit returns the same ``SODMResult`` — and compiles the same
+``FittedODM`` — as the uninterrupted one, with only the not-yet-solved
+levels re-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import warnings
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.checkpoint import CheckpointManager
+
+
+class ProvenanceError(ValueError):
+    """Resume directory belongs to a different problem/data/key."""
+
+
+def _key_fingerprint(key) -> list[int]:
+    try:
+        data = jax.random.key_data(key)
+    except Exception:                     # raw uint32 key array
+        data = key
+    return [int(v) for v in np.asarray(data).reshape(-1)]
+
+
+def provenance(kernel, params, cfg, x, y, key) -> dict:
+    """Fingerprint of everything a resumed solve must agree on.
+
+    reprs of the (frozen, nested) config dataclasses are deterministic;
+    the data fingerprint is shape/dtype plus two exact float32 sums
+    (JSON round-trips binary64 exactly, and float32 sums promoted to
+    python floats are representable), so a changed dataset is caught
+    without hashing O(M·d) bytes.
+    """
+    return {
+        "format": 1,
+        "kernel": repr(kernel),
+        "params": repr(params),
+        "cfg": repr(cfg),
+        "data": {
+            "shape": [int(s) for s in x.shape],
+            "dtype": str(x.dtype),
+            "x_sum": float(jnp.sum(x)),
+            "y_sum": float(jnp.sum(y)),
+        },
+        "key": _key_fingerprint(key),
+    }
+
+
+def _check_provenance(saved: dict, want: dict, strict: bool,
+                      directory: str) -> bool:
+    """True if compatible; raise (strict) or warn+False otherwise."""
+    if saved == want:
+        return True
+    diff = [k for k in want if saved.get(k) != want.get(k)]
+    msg = (f"resume directory {directory!r} was written by a different "
+           f"run (mismatched: {diff}); refusing to splice its duals into "
+           f"this solve")
+    if strict:
+        raise ProvenanceError(msg)
+    warnings.warn(msg + " — cold-starting instead", RuntimeWarning,
+                  stacklevel=4)
+    return False
+
+
+def _template_from_manifest(manifest: dict) -> dict:
+    """Rebuild the flat-dict save tree's template from manifest leaves."""
+    return {k: jax.ShapeDtypeStruct(tuple(leaf["shape"]),
+                                    jnp.dtype(leaf["dtype"]))
+            for k, leaf in manifest["leaves"].items()}
+
+
+@dataclasses.dataclass(frozen=True)
+class ResumeConfig:
+    """User-facing ``fit(resume=...)`` value (a bare path also works).
+
+    ``segment`` is the DSVRG checkpoint cadence in epochs; the cascade
+    route checkpoints every level regardless. ``strict`` controls the
+    provenance mismatch behavior (raise vs warn + cold start). ``keep``
+    is the checkpoint retention depth — 0 keeps every step (a resumed
+    run then replays to completion with zero new solves on re-entry).
+    """
+
+    directory: str
+    keep: int = 3
+    strict: bool = True
+    segment: int = 1
+
+    @staticmethod
+    def of(value) -> "ResumeConfig":
+        if isinstance(value, ResumeConfig):
+            return value
+        return ResumeConfig(directory=os.fspath(value))
+
+
+class RestoredCascade(NamedTuple):
+    level: int               # the level whose solve this state COMPLETED
+    K: int
+    m: int
+    alphas: jax.Array        # (K, 2m) post-solve duals of that level
+    perm: jax.Array          # (M,) partition permutation
+    sweeps_per_level: list
+    kkt: jax.Array
+
+
+class RestoredSegments(NamedTuple):
+    epoch: int               # epochs completed
+    w: jax.Array
+    history: jax.Array       # (epoch,) objective after each epoch
+    perm: jax.Array
+    eta: float
+
+
+class CascadeResumeManager:
+    """Per-level checkpoints of the Algorithm-1 level loop."""
+
+    route = "cascade"
+
+    def __init__(self, cfg: ResumeConfig, prov: dict, faults=None):
+        self.cfg = cfg
+        self.prov = prov
+        self.ckpt = CheckpointManager(cfg.directory, keep=cfg.keep,
+                                      faults=faults)
+
+    def save_level(self, *, level: int, K: int, m: int, alphas, perm,
+                   sweeps_per_level: list, kkt) -> None:
+        step = len(sweeps_per_level)          # levels solved so far
+        self.ckpt.save(step, {"alphas": alphas, "perm": perm}, metadata={
+            "route": self.route,
+            "level": int(level), "K": int(K), "m": int(m),
+            "sweeps_per_level": [int(s) for s in sweeps_per_level],
+            "kkt": float(kkt),
+            "provenance": self.prov,
+        })
+
+    def restore(self) -> RestoredCascade | None:
+        step = self.ckpt.latest_step()
+        if step is None:
+            return None
+        manifest = self.ckpt.metadata(step)
+        md = manifest["metadata"]
+        if md.get("route") != self.route:
+            raise ProvenanceError(
+                f"resume directory {self.cfg.directory!r} holds "
+                f"{md.get('route')!r} checkpoints, not cascade state")
+        if not _check_provenance(md.get("provenance", {}), self.prov,
+                                 self.cfg.strict, self.cfg.directory):
+            return None
+        tree = self.ckpt.restore(_template_from_manifest(manifest), step)
+        return RestoredCascade(
+            level=int(md["level"]), K=int(md["K"]), m=int(md["m"]),
+            alphas=tree["alphas"], perm=tree["perm"],
+            sweeps_per_level=list(md["sweeps_per_level"]),
+            kkt=jnp.asarray(md["kkt"], tree["alphas"].dtype))
+
+
+class DsvrgResumeManager:
+    """Between-segment checkpoints of the Algorithm-2 epoch scan."""
+
+    route = "dsvrg"
+
+    def __init__(self, cfg: ResumeConfig, prov: dict, faults=None):
+        self.cfg = cfg
+        self.prov = prov
+        self.ckpt = CheckpointManager(cfg.directory, keep=cfg.keep,
+                                      faults=faults)
+
+    @property
+    def segment(self) -> int:
+        return max(1, self.cfg.segment)
+
+    def save_segment(self, *, epoch: int, w, history, perm, eta) -> None:
+        self.ckpt.save(epoch, {"w": w, "history": history, "perm": perm},
+                       metadata={
+            "route": self.route,
+            "epoch": int(epoch),
+            "eta": float(eta),
+            "provenance": self.prov,
+        })
+
+    def restore(self) -> RestoredSegments | None:
+        step = self.ckpt.latest_step()
+        if step is None:
+            return None
+        manifest = self.ckpt.metadata(step)
+        md = manifest["metadata"]
+        if md.get("route") != self.route:
+            raise ProvenanceError(
+                f"resume directory {self.cfg.directory!r} holds "
+                f"{md.get('route')!r} checkpoints, not dsvrg state")
+        if not _check_provenance(md.get("provenance", {}), self.prov,
+                                 self.cfg.strict, self.cfg.directory):
+            return None
+        tree = self.ckpt.restore(_template_from_manifest(manifest), step)
+        return RestoredSegments(
+            epoch=int(md["epoch"]), w=tree["w"], history=tree["history"],
+            perm=tree["perm"], eta=float(md["eta"]))

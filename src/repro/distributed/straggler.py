@@ -43,12 +43,20 @@ class SpeculativeScheduler:
     def __init__(self, cfg: SpecConfig = SpecConfig()):
         self.cfg = cfg
 
-    def run(self, tasks: Sequence[Callable[[], Any]]) -> list[Any]:
+    def run(self, tasks: Sequence[Callable[[], Any]],
+            faults=None) -> list[Any]:
         """Execute all tasks; returns results in task order.
 
         Each task may be re-submitted up to max_duplicates extra times once
         the speculation deadline passes; the first completed attempt's
         result is kept.
+
+        ``faults`` (a :class:`repro.distributed.faults.FaultPlan`) fires
+        the ``"cascade.partition"`` site at the start of every attempt:
+        a ``delay`` rule makes that partition straggle (speculation under
+        test), a ``kill`` rule fails the attempt — idempotent tasks mean
+        the scheduler just re-dispatches it, which is the worker-loss
+        recovery path this instrument exists to prove.
         """
         n = len(tasks)
         results: list[Any] = [None] * n
@@ -66,12 +74,16 @@ class SpeculativeScheduler:
 
             def submit(i):
                 t0 = time.monotonic()
+                attempts[i] += 1
+                att = attempts[i]
 
                 def wrapped():
+                    if faults is not None:
+                        faults.site("cascade.partition", partition=i,
+                                    attempt=att)
                     out = tasks[i]()
                     return out, time.monotonic() - t0
 
-                attempts[i] += 1
                 futures[pool.submit(wrapped)] = i
 
             for i in range(n):

@@ -1,0 +1,25 @@
+"""repro.observe — training observability: metric trackers + profiler hook.
+
+The tracker protocol is deliberately tiny (levanter-style): a tracker is
+anything with ``log_metrics(step, metrics)``. The estimator feeds it
+per-level cascade statistics (KKT residual, objective, support-vector
+count, rows/s) and per-segment DSVRG progress, so margin-distribution
+training is observable instead of anecdotal.
+"""
+from repro.observe.tracker import (
+    CompositeTracker,
+    InMemoryTracker,
+    JsonlTracker,
+    Tracker,
+    read_jsonl,
+)
+from repro.observe.profiler import profile_ctx
+
+__all__ = [
+    "Tracker",
+    "InMemoryTracker",
+    "JsonlTracker",
+    "CompositeTracker",
+    "read_jsonl",
+    "profile_ctx",
+]

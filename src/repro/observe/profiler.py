@@ -1,0 +1,41 @@
+"""Opt-in JAX profiler hook.
+
+``profile_ctx(dir)`` wraps a training run in ``jax.profiler.trace`` when
+given a directory and is a no-op otherwise, so the estimator can take a
+``profile_dir=`` kwarg without branching at every call site. Trace
+capture failures degrade to a warning rather than killing training — a
+profiler is never worth a failed fit.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+import warnings
+
+
+@contextlib.contextmanager
+def profile_ctx(profile_dir: str | os.PathLike | None):
+    """Trace into ``profile_dir`` if set; no-op when ``None``."""
+    if profile_dir is None:
+        yield
+        return
+    import jax
+
+    path = os.fspath(profile_dir)
+    os.makedirs(path, exist_ok=True)
+    try:
+        jax.profiler.start_trace(path)
+    except Exception as e:  # profiler backends vary by platform
+        warnings.warn(
+            f"jax profiler trace unavailable ({e}); continuing unprofiled",
+            RuntimeWarning, stacklevel=3)
+        yield
+        return
+    try:
+        yield
+    finally:
+        try:
+            jax.profiler.stop_trace()
+        except Exception as e:
+            warnings.warn(f"jax profiler stop_trace failed ({e})",
+                          RuntimeWarning, stacklevel=3)

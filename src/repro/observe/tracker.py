@@ -1,0 +1,105 @@
+"""Metric trackers: the ``log_metrics(step, dict)`` protocol + backends.
+
+Design follows levanter's tracker abstraction: trainers emit flat
+``{name: scalar}`` dicts at integer steps and never know where they go.
+Backends here are dependency-free — an in-memory list (tests, notebook
+inspection) and an append-only jsonl file (survives preemption; each
+line is self-delimiting, so a half-written tail line from a killed
+process is skipped by ``read_jsonl`` rather than corrupting the
+history). ``CompositeTracker`` fans out to several.
+
+Metric values are coerced to plain Python scalars at the logging
+boundary (``float(jnp_scalar)`` forces a device sync), so backends never
+hold device arrays alive and jsonl output is always serialisable.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Iterable, Mapping, Protocol, runtime_checkable
+
+
+@runtime_checkable
+class Tracker(Protocol):
+    """Anything with ``log_metrics(step, metrics)`` is a tracker."""
+
+    def log_metrics(self, step: int, metrics: Mapping[str, object]) -> None:
+        ...
+
+
+def _scalarize(value: object) -> object:
+    """Coerce metric values to json-safe Python scalars."""
+    if isinstance(value, (str, bool, type(None))):
+        return value
+    if isinstance(value, int):
+        return value
+    try:
+        return float(value)          # jnp/np scalars, python floats
+    except (TypeError, ValueError):
+        return repr(value)
+
+
+class InMemoryTracker:
+    """Records ``(step, metrics)`` pairs on ``self.steps`` for assertions."""
+
+    def __init__(self):
+        self.steps: list[tuple[int, dict]] = []
+
+    def log_metrics(self, step: int, metrics: Mapping[str, object]) -> None:
+        self.steps.append(
+            (int(step), {k: _scalarize(v) for k, v in metrics.items()}))
+
+    def series(self, name: str) -> list[object]:
+        """All logged values of metric ``name``, in step order."""
+        return [m[name] for _, m in self.steps if name in m]
+
+    def latest(self) -> dict:
+        return self.steps[-1][1] if self.steps else {}
+
+
+class JsonlTracker:
+    """Appends one ``{"step": ..., **metrics}`` json object per line.
+
+    Append + flush per call: a preempted process loses at most its final
+    partial line, which ``read_jsonl`` tolerates.
+    """
+
+    def __init__(self, path: str | os.PathLike):
+        self.path = os.fspath(path)
+        parent = os.path.dirname(self.path)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
+
+    def log_metrics(self, step: int, metrics: Mapping[str, object]) -> None:
+        record = {"step": int(step)}
+        record.update({k: _scalarize(v) for k, v in metrics.items()})
+        with open(self.path, "a") as f:
+            f.write(json.dumps(record) + "\n")
+            f.flush()
+            os.fsync(f.fileno())
+
+
+def read_jsonl(path: str | os.PathLike) -> list[dict]:
+    """Load a JsonlTracker file, skipping a torn final line if present."""
+    records: list[dict] = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                records.append(json.loads(line))
+            except json.JSONDecodeError:
+                continue          # torn tail line from a killed writer
+    return records
+
+
+class CompositeTracker:
+    """Fans ``log_metrics`` out to several trackers."""
+
+    def __init__(self, trackers: Iterable[Tracker]):
+        self.trackers = list(trackers)
+
+    def log_metrics(self, step: int, metrics: Mapping[str, object]) -> None:
+        for t in self.trackers:
+            t.log_metrics(step, metrics)

@@ -146,10 +146,16 @@ class Batcher:
     """
 
     def __init__(self, scorer: MicrobatchScorer, max_batch: int = 64,
-                 max_wait: float = 2e-3):
+                 max_wait: float = 2e-3, faults=None):
         self.scorer = scorer
         self.max_batch = min(max_batch, scorer.max_batch)
         self.max_wait = max_wait
+        # fault-injection hook (repro.distributed.faults.FaultPlan): the
+        # "serve.flush" site fires before scoring; with a virtual-clock
+        # plan (sleeper=None) an injected delay shifts the batch's
+        # completion time instead of wall-sleeping, so replay stays
+        # deterministic
+        self.faults = faults
         self._pending: list[_Pending] = []
         self._next_rid = 0
         self.batches: list[int] = []          # flushed batch sizes
@@ -176,6 +182,8 @@ class Batcher:
         now = time.monotonic() if now is None else now
         batch, self._pending = (self._pending[:self.max_batch],
                                 self._pending[self.max_batch:])
+        if self.faults is not None:
+            now += self.faults.site("serve.flush", batch=len(batch))
         xb = jnp.stack([p.x for p in batch])
         scores = jax.device_get(self.scorer.score(xb))
         self.batches.append(len(batch))

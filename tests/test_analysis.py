@@ -252,8 +252,9 @@ class TestInvariantRegistry:
             inv.counter("sodm.perm_gather").count
 
     def test_every_kernel_and_route_is_covered(self):
-        """Meta-acceptance: each registered Pallas kernel and each
-        training route has >= 1 declared invariant."""
+        """Meta-acceptance: each registered Pallas kernel, each training
+        route, AND each fault-tolerance/observability component has >= 1
+        declared invariant."""
         kernels = {i.subject for i in _ALL if i.kind == "kernel"}
         assert kernels == set(pc.PLAN_BUILDERS), (
             f"kernels missing a declared invariant: "
@@ -262,6 +263,10 @@ class TestInvariantRegistry:
         assert routes == set(registry.routes()), (
             f"routes missing a declared invariant: "
             f"{set(registry.routes()) - routes}")
+        comps = {i.subject for i in _ALL if i.kind == "component"}
+        assert comps == set(inv.COMPONENTS), (
+            f"components missing a declared invariant: "
+            f"{set(inv.COMPONENTS) - comps}")
 
 
 @pytest.mark.parametrize(

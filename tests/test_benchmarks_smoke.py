@@ -36,6 +36,36 @@ def test_run_registry_covers_all_tables():
                             "kernels", "roofline", "serve"}
 
 
+def test_bench_persist_schema(tmp_path):
+    """ISSUE 7 satellite: `python -m benchmarks.run --quick --out-dir D`
+    persists a BENCH_<name>.json per bench with the v1 schema (route,
+    wall-clock, peak bytes, device kind) so CI runs leave artifacts."""
+    import json
+    from benchmarks import run
+
+    rc = run.main(["kernels", "--quick", "--out-dir", str(tmp_path)])
+    assert rc == 0
+    path = tmp_path / "BENCH_kernels.json"
+    assert path.exists()
+    rec = json.loads(path.read_text())
+    assert rec["schema_version"] == 1
+    assert rec["bench"] == "kernels"
+    assert rec["backend"] and rec["device_kind"] and rec["jax_version"]
+    assert rec["wall_clock_s"] > 0
+    assert isinstance(rec["peak_bytes"], int)    # 0 on CPU is fine
+    assert rec["rows"] == len(rec["lines"]) > 0
+    assert any(line.startswith("kernels,") for line in rec["lines"])
+    # no torn temp file left behind
+    assert not list(tmp_path.glob("*.tmp"))
+
+
+def test_bench_cli_rejects_unknowns(tmp_path, capsys):
+    from benchmarks import run
+    assert run.main(["nope"]) == 1
+    assert "unknown benchmark" in capsys.readouterr().out
+    assert run.main(["--out-dir"]) == 1
+
+
 def test_kernels_bench_quick_executes():
     """Compile-and-run the full kernels_bench script path at toy sizes.
 

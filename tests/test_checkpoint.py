@@ -86,6 +86,59 @@ class TestDurability:
         assert bool(jnp.all(back["x"] == 1.0))
 
 
+@pytest.mark.chaos
+class TestCrashWindow:
+    """ISSUE 7: kill between the fsync'd temp write and the atomic rename."""
+
+    def test_kill_mid_checkpoint_previous_step_survives(self, tmp_path):
+        from repro.distributed.faults import FaultPlan, Preemption
+
+        plan = FaultPlan()
+        mgr = CheckpointManager(str(tmp_path), keep=3, faults=plan)
+        t1 = _tree(1)
+        mgr.save(1, t1, {"data_step": 1})
+        plan.kill_mid_checkpoint()          # arm AFTER step 1 committed
+
+        with pytest.raises(Preemption) as exc:
+            mgr.save(2, _tree(2), {"data_step": 2})
+        assert exc.value.site == "checkpoint.pre_rename"
+
+        # the previous manifest is still the latest and fully loadable
+        assert mgr.latest_step() == 1
+        back = mgr.restore(t1)
+        eq = jax.tree.map(lambda a, b: bool(jnp.array_equal(a, b)), t1, back)
+        assert all(jax.tree.leaves(eq))
+        assert mgr.metadata()["metadata"]["data_step"] == 1
+
+        # the killed writer left an orphaned temp dir ...
+        orphans = [n for n in os.listdir(tmp_path) if ".tmp." in n]
+        assert orphans, "kill site is not inside the crash window"
+        # ... which stays invisible to discovery
+        assert mgr.all_steps() == [1]
+
+        # and the next successful save garbage-collects it
+        mgr.save(2, _tree(2), {"data_step": 2})
+        assert [n for n in os.listdir(tmp_path) if ".tmp." in n] == []
+        assert mgr.latest_step() == 2
+
+    def test_fresh_manager_ignores_orphans(self, tmp_path):
+        """A restarted process (new manager over the same dir) restores the
+        committed step even with a crashed writer's droppings present."""
+        from repro.distributed.faults import FaultPlan, Preemption
+
+        plan = FaultPlan()
+        mgr = CheckpointManager(str(tmp_path), faults=plan)
+        mgr.save(7, {"x": jnp.arange(5.0)})
+        plan.kill_mid_checkpoint()
+        with pytest.raises(Preemption):
+            mgr.save(8, {"x": jnp.arange(5.0) + 1})
+
+        mgr2 = CheckpointManager(str(tmp_path))   # the restart
+        assert mgr2.latest_step() == 7
+        back = mgr2.restore({"x": jnp.zeros(5)})
+        assert bool(jnp.array_equal(back["x"], jnp.arange(5.0)))
+
+
 class TestTrainResume:
     def test_end_to_end_resume(self, tmp_path):
         """Train 6 steps with checkpointing == train 3, restart, train 3."""

@@ -1,0 +1,111 @@
+"""Elastic resharding unit coverage: reshard / restore_elastic /
+validate_resharding, including a shrink-then-grow mesh round trip.
+
+Runs in a subprocess with --xla_force_host_platform_device_count=8 so the
+main pytest process keeps its single real device; one subprocess executes
+the whole battery to amortize jax startup (same pattern as test_spmd.py).
+"""
+import os
+import subprocess
+import sys
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import tempfile
+
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro import sharding
+from repro.distributed import elastic
+from repro.distributed.checkpoint import CheckpointManager
+from repro.launch.mesh import make_host_mesh
+
+failures = []
+def check(name, cond, info=""):
+    print(("PASS " if cond else "FAIL ") + name, info)
+    if not cond: failures.append(name)
+
+def submesh(n, shape, axes):
+    # a mesh over the FIRST n host devices — the "shrunk cluster"
+    return Mesh(np.array(jax.devices()[:n]).reshape(shape), axes)
+
+tree = {
+    "w": jnp.arange(64.0).reshape(16, 4),
+    "b": jnp.arange(8.0),
+    "step": jnp.int32(3),
+}
+axes_tree = {
+    "w": ("batch", None),     # batch -> ("pod", "data"); pod absent here
+    "b": ("embed",),          # embed -> "data"
+    "step": (),
+}
+
+# --- 1. reshard places leaves on the requested mesh axes ----------------
+mesh8 = make_host_mesh((4, 2), ("data", "model"))
+on8 = elastic.reshard(tree, axes_tree, mesh8)
+check("reshard w spec", on8["w"].sharding.spec == P("data"),
+      str(on8["w"].sharding.spec))
+check("reshard b spec", on8["b"].sharding.spec == P("data"),
+      str(on8["b"].sharding.spec))
+check("reshard scalar replicated", on8["step"].sharding.spec == P(),
+      str(on8["step"].sharding.spec))
+check("reshard values", elastic.validate_resharding(tree, on8))
+
+# --- 2. validate_resharding detects value drift -------------------------
+bad = dict(on8)
+bad["b"] = on8["b"] + 1.0
+check("validate catches drift", not elastic.validate_resharding(tree, bad))
+
+# --- 3. divisibility fallback: non-dividing dim replicates --------------
+odd = {"v": jnp.arange(6.0)}           # 6 % 4 != 0 on data=4
+odd_axes = {"v": ("batch",)}
+on_odd = elastic.reshard(odd, odd_axes, mesh8)
+check("divisibility fallback replicates",
+      on_odd["v"].sharding.spec == P(), str(on_odd["v"].sharding.spec))
+check("fallback values", elastic.validate_resharding(odd, on_odd))
+
+# --- 4. shrink-then-grow round trip: 8 -> 2 -> 8 devices ----------------
+mesh2 = submesh(2, (2, 1), ("data", "model"))       # job lost 6 workers
+shrunk = elastic.reshard(on8, axes_tree, mesh2)
+check("shrink devices", len(shrunk["w"].sharding.device_set) <= 2)
+check("shrink values", elastic.validate_resharding(tree, shrunk))
+regrown = elastic.reshard(shrunk, axes_tree, mesh8)  # workers came back
+check("grow devices", len(regrown["w"].sharding.device_set) == 8)
+check("grow values", elastic.validate_resharding(tree, regrown))
+
+# --- 5. restore_elastic: checkpoint on mesh A, restore on mesh B --------
+with tempfile.TemporaryDirectory() as d:
+    mgr = CheckpointManager(d)
+    mgr.save(1, on8, {"mesh": "8dev"})
+    template = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    back2 = elastic.restore_elastic(mgr, template, axes_tree, mesh2)
+    check("restore_elastic shrink values",
+          elastic.validate_resharding(tree, back2))
+    check("restore_elastic shrink placement",
+          len(back2["w"].sharding.device_set) <= 2)
+    # the same checkpoint restores onto the regrown mesh too
+    back8 = elastic.restore_elastic(mgr, template, axes_tree, mesh8)
+    check("restore_elastic grow values",
+          elastic.validate_resharding(tree, back8))
+    check("restore_elastic grow spec",
+          back8["w"].sharding.spec == P("data"),
+          str(back8["w"].sharding.spec))
+
+print("FAILURES:", failures)
+raise SystemExit(1 if failures else 0)
+"""
+
+
+def test_elastic_battery():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=600)
+    print(proc.stdout)
+    print(proc.stderr[-3000:] if proc.stderr else "")
+    assert proc.returncode == 0, "elastic battery failed (see output)"

@@ -1,0 +1,249 @@
+"""Chaos battery: preemption-proof cascade + dsvrg training (ISSUE 7).
+
+Every test kills the driver with a deterministic fault plan
+(repro.distributed.faults), restarts via ``fit(resume=<dir>)``, and
+asserts the resumed model is BIT-identical to the uninterrupted fit —
+with fewer level solves than a cold restart whenever a checkpoint was
+committed before the kill.
+
+The cascade level counter counts DOWN from cfg.levels to 0 (levels+1
+solves total); the ``cascade.level`` fault site fires *before* each level
+solve, so killing at level k leaves level k+1's checkpoint as the latest
+committed state and the resumed run re-solves exactly levels k..0.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import ODMEstimator, ProblemSpec
+from repro.core import kernel_fns as kf
+from repro.core import sodm
+from repro.core.dsvrg import DSVRGConfig
+from repro.distributed import resume as resume_mod
+from repro.distributed.faults import FaultPlan, Preemption
+
+pytestmark = pytest.mark.chaos
+
+
+def _toy(M=32, d=4, seed=0):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = jnp.concatenate([jax.random.normal(k1, (M // 2, d)) + 1.0,
+                         jax.random.normal(k2, (M // 2, d)) - 1.0])
+    y = jnp.concatenate([jnp.ones(M // 2), -jnp.ones(M // 2)])
+    perm = jax.random.permutation(k3, M)
+    return x[perm], y[perm]
+
+
+def _cascade_cfg(levels, strategy="stratified"):
+    return sodm.SODMConfig(p=2, levels=levels, n_landmarks=4, tol=1e-4,
+                           max_sweeps=50, partition_strategy=strategy)
+
+
+def _rbf_problem():
+    return ProblemSpec(kernel=kf.KernelSpec(name="rbf", gamma=0.5))
+
+
+def _fit(cfg, x, y, **kw):
+    est = ODMEstimator(_rbf_problem(), route="sodm", cfg=cfg)
+    return est.fit(x, y, jax.random.PRNGKey(0), **kw)
+
+
+def _models_bit_identical(a, b):
+    """FittedODM equality, bitwise, whichever representation is packed."""
+    assert a.compression == b.compression
+    for f in ("w", "x_sv", "coef"):
+        fa, fb = getattr(a, f), getattr(b, f)
+        assert (fa is None) == (fb is None), f
+        if fa is not None:
+            assert np.array_equal(np.asarray(fa), np.asarray(fb)), f
+    return True
+
+
+class TestCascadeKillAtLevel:
+    """kill-at-level-k across every cascade depth and both partition
+    schedules the toy problems support."""
+
+    @pytest.mark.parametrize("levels,kill_level,strategy", [
+        (1, 0, "stratified"),
+        (2, 1, "stratified"),
+        (2, 0, "random"),
+        (3, 2, "stratified"),
+        (3, 1, "random"),
+    ])
+    def test_bit_identical_with_fewer_solves(self, tmp_path, levels,
+                                             kill_level, strategy):
+        x, y = _toy()
+        cfg = _cascade_cfg(levels, strategy)
+        base_model, base = _fit(cfg, x, y)
+
+        d = str(tmp_path)
+        with pytest.raises(Preemption) as exc:
+            _fit(cfg, x, y, resume=d,
+                 faults=FaultPlan().kill_at_level(kill_level))
+        assert exc.value.site == "cascade.level"
+        assert exc.value.info["level"] == kill_level
+
+        c0 = sodm.level_solve_count()
+        model, resumed = _fit(cfg, x, y, resume=d)
+        ran = sodm.level_solve_count() - c0
+
+        cold = cfg.levels + 1
+        # levels kill_level..0 remain: kill_level+1 solves, < cold restart
+        assert ran == kill_level + 1 < cold
+        assert np.array_equal(np.asarray(resumed.raw.alpha),
+                              np.asarray(base.raw.alpha))
+        assert _models_bit_identical(model, base_model)
+
+    def test_kill_at_top_level_cold_starts(self, tmp_path):
+        """Killed before the very first level solve: no checkpoint exists,
+        so resume IS a cold start — and still bit-identical."""
+        x, y = _toy()
+        cfg = _cascade_cfg(2)
+        _, base = _fit(cfg, x, y)
+
+        d = str(tmp_path)
+        with pytest.raises(Preemption):
+            _fit(cfg, x, y, resume=d,
+                 faults=FaultPlan().kill_at_level(cfg.levels))
+
+        c0 = sodm.level_solve_count()
+        _, resumed = _fit(cfg, x, y, resume=d)
+        assert sodm.level_solve_count() - c0 == cfg.levels + 1
+        assert np.array_equal(np.asarray(resumed.raw.alpha),
+                              np.asarray(base.raw.alpha))
+
+    def test_completed_dir_resumes_with_zero_solves(self, tmp_path):
+        """Re-running fit(resume=) over a finished directory replays the
+        final checkpoint and solves nothing."""
+        x, y = _toy()
+        cfg = _cascade_cfg(2)
+        d = str(tmp_path)
+        _, first = _fit(cfg, x, y, resume=d)
+
+        c0 = sodm.level_solve_count()
+        _, again = _fit(cfg, x, y, resume=d)
+        assert sodm.level_solve_count() - c0 == 0
+        assert np.array_equal(np.asarray(again.raw.alpha),
+                              np.asarray(first.raw.alpha))
+
+
+class TestCascadeKillMidCheckpoint:
+    def test_kill_inside_crash_window_then_resume(self, tmp_path):
+        """The driver dies INSIDE CheckpointManager._write (post-fsync,
+        pre-rename) while committing level state. The torn write must not
+        poison the directory: resume restarts from the previous committed
+        level and stays bit-identical."""
+        x, y = _toy()
+        cfg = _cascade_cfg(2)
+        _, base = _fit(cfg, x, y)
+
+        d = str(tmp_path)
+        # step = completed level solves; step=2 is the SECOND level commit,
+        # so step=1 (the top level's state) is already durable when we die
+        with pytest.raises(Preemption) as exc:
+            _fit(cfg, x, y, resume=d,
+                 faults=FaultPlan().kill("checkpoint.pre_rename", step=2))
+        assert exc.value.site == "checkpoint.pre_rename"
+
+        c0 = sodm.level_solve_count()
+        _, resumed = _fit(cfg, x, y, resume=d)
+        ran = sodm.level_solve_count() - c0
+        assert ran == cfg.levels < cfg.levels + 1
+        assert np.array_equal(np.asarray(resumed.raw.alpha),
+                              np.asarray(base.raw.alpha))
+
+
+class TestProvenance:
+    def test_strict_mismatch_raises(self, tmp_path):
+        x, y = _toy()
+        cfg = _cascade_cfg(2)
+        d = str(tmp_path)
+        with pytest.raises(Preemption):
+            _fit(cfg, x, y, resume=d, faults=FaultPlan().kill_at_level(1))
+        x2, y2 = _toy(seed=7)                    # different data, same dir
+        with pytest.raises(resume_mod.ProvenanceError):
+            _fit(cfg, x2, y2, resume=d)
+
+    def test_lenient_mismatch_cold_starts(self, tmp_path):
+        x, y = _toy()
+        cfg = _cascade_cfg(2)
+        d = str(tmp_path)
+        with pytest.raises(Preemption):
+            _fit(cfg, x, y, resume=d, faults=FaultPlan().kill_at_level(1))
+        x2, y2 = _toy(seed=7)
+        _, base2 = _fit(cfg, x2, y2)
+        rc = resume_mod.ResumeConfig(directory=d, strict=False)
+        with pytest.warns(RuntimeWarning, match="different run"):
+            _, resumed = _fit(cfg, x2, y2, resume=rc)
+        assert np.array_equal(np.asarray(resumed.raw.alpha),
+                              np.asarray(base2.raw.alpha))
+
+
+class TestDsvrgResume:
+    @pytest.mark.parametrize("schedule", ["serial", "parallel"])
+    def test_resume_determinism(self, tmp_path, schedule):
+        """Kill between scan segments at epoch 2 of 4; the resumed iterate
+        is bitwise equal to the uninterrupted segmented run, for both
+        inner-phase schedules."""
+        x, y = _toy()
+        dcfg = DSVRGConfig(n_partitions=4, epochs=4, batch=8,
+                           n_landmarks=4, schedule=schedule)
+        cfg = sodm.SODMConfig(p=2, levels=2, n_landmarks=4, tol=1e-4,
+                              max_sweeps=50, dsvrg=dcfg)
+        problem = ProblemSpec(kernel=kf.KernelSpec(name="linear"))
+        key = jax.random.PRNGKey(0)
+
+        d1, d2 = str(tmp_path / "a"), str(tmp_path / "b")
+        model_a, _ = ODMEstimator(problem, route="dsvrg", cfg=cfg).fit(
+            x, y, key, resume=d1)
+        with pytest.raises(Preemption) as exc:
+            ODMEstimator(problem, route="dsvrg", cfg=cfg).fit(
+                x, y, key, resume=d2, faults=FaultPlan().kill_at_epoch(2))
+        assert exc.value.site == "dsvrg.segment"
+        model_b, _ = ODMEstimator(problem, route="dsvrg", cfg=cfg).fit(
+            x, y, key, resume=d2)
+        assert np.array_equal(np.asarray(model_a.w), np.asarray(model_b.w))
+
+    def test_segment_width_preserves_result(self, tmp_path):
+        """Segmented execution (resume hooks on) is bitwise identical to
+        the hook-free single-scan path regardless of segment width —
+        SVRG re-anchors every epoch, so epoch boundaries are exact."""
+        x, y = _toy()
+        dcfg = DSVRGConfig(n_partitions=4, epochs=4, batch=8, n_landmarks=4)
+        cfg = sodm.SODMConfig(p=2, levels=2, n_landmarks=4, tol=1e-4,
+                              max_sweeps=50, dsvrg=dcfg)
+        problem = ProblemSpec(kernel=kf.KernelSpec(name="linear"))
+        key = jax.random.PRNGKey(0)
+
+        ref, _ = ODMEstimator(problem, route="dsvrg", cfg=cfg).fit(x, y, key)
+        for seg in (1, 2, 4):
+            rc = resume_mod.ResumeConfig(
+                directory=str(tmp_path / f"s{seg}"), segment=seg)
+            m, _ = ODMEstimator(problem, route="dsvrg", cfg=cfg).fit(
+                x, y, key, resume=rc)
+            assert np.array_equal(np.asarray(ref.w), np.asarray(m.w)), seg
+
+
+class TestFaultPlanBookkeeping:
+    def test_fired_log_and_spent_rules(self):
+        plan = FaultPlan(sleeper=None).delay("cascade.partition", 0.25,
+                                            partition=1).kill_at_level(0)
+        assert plan.site("cascade.partition", partition=0, attempt=1) == 0.0
+        assert plan.site("cascade.partition", partition=1, attempt=1) == 0.25
+        # rule spent: the retry of partition 1 is clean
+        assert plan.site("cascade.partition", partition=1, attempt=2) == 0.0
+        with pytest.raises(Preemption):
+            plan.site("cascade.level", level=0, K=1)
+        assert [(f[0], f[1]) for f in plan.fired] == [
+            ("delay", "cascade.partition"), ("kill", "cascade.level")]
+
+    def test_non_instrumented_route_rejects_hooks(self):
+        x, y = _toy()
+        est = ODMEstimator(_rbf_problem(), route="cascade",
+                           cfg=_cascade_cfg(1))
+        with pytest.raises(ValueError, match="no .*seam"):
+            est.fit(x, y, jax.random.PRNGKey(0), faults=FaultPlan())
