@@ -7,16 +7,22 @@ Flags: `--quick` routes each bench through its toy-scale path;
 (schema below) so CI runs leave a machine-readable trail instead of only
 scrollback.
 
-Persisted schema (schema_version 1):
+Persisted schema (schema_version 2):
 
-    {"schema_version": 1, "bench": "<name>", "device_kind": "...",
+    {"schema_version": 2, "bench": "<name>", "device_kind": "...",
      "backend": "cpu|gpu|tpu", "jax_version": "...",
      "wall_clock_s": 1.23, "peak_bytes": 0-or-device-peak,
-     "rows": <len(lines)>, "lines": ["table2,...", ...]}
+     "rows": <len(lines)>, "lines": ["table2,...", ...],
+     "metrics": {"serve.request.latency_s.p99": ..., ...}}
 
 ``peak_bytes`` comes from ``device.memory_stats()`` when the backend
 exposes it (TPU/GPU) and is 0 on backends that don't (CPU) — absent
-telemetry is not an error.
+telemetry is not an error. ``metrics`` (new in schema 2) is whatever
+flat instrument snapshot the bench's ``run()`` returns — a
+``repro.observe.MetricsRegistry.snapshot()`` dict of histogram
+percentiles / counters — or ``{}`` for benches that return nothing.
+``repro.observe.trend`` + ``scripts/bench_gate.py`` consume these
+records and compare them against ``benchmarks/baselines/``.
 """
 from __future__ import annotations
 
@@ -63,11 +69,11 @@ def _peak_bytes() -> int:
 
 
 def _persist(out_dir: str, name: str, lines: list[str],
-             wall_s: float) -> str:
+             wall_s: float, metrics: dict | None = None) -> str:
     import jax
     dev = jax.local_devices()[0]
     record = {
-        "schema_version": 1,
+        "schema_version": 2,
         "bench": name,
         "device_kind": dev.device_kind,
         "backend": dev.platform,
@@ -76,6 +82,7 @@ def _persist(out_dir: str, name: str, lines: list[str],
         "peak_bytes": _peak_bytes(),
         "rows": len(lines),
         "lines": list(lines),
+        "metrics": dict(metrics) if isinstance(metrics, dict) else {},
     }
     os.makedirs(out_dir, exist_ok=True)
     path = os.path.join(out_dir, f"BENCH_{name}.json")
@@ -113,12 +120,13 @@ def main(argv: list[str] | None = None) -> int:
         kw = _QUICK_KW.get(name, {}) if quick else {}
         t0 = time.time()
         print(f"=== {name} ===", flush=True)
-        ALL[name](out, **kw)
+        ret = ALL[name](out, **kw)
         wall = time.time() - t0
         for line in out:
             print(line, flush=True)
         if out_dir is not None:
-            print(f"wrote {_persist(out_dir, name, out, wall)}", flush=True)
+            print(f"wrote {_persist(out_dir, name, out, wall, ret)}",
+                  flush=True)
         print(f"=== {name} done in {wall:.1f}s ===", flush=True)
         out.clear()
     return 0

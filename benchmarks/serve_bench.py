@@ -18,6 +18,12 @@ What the numbers must show (the PR 4 acceptance criteria, asserted by
 
 ``run(out, quick=True)`` shrinks the data set so the CI smoke tier
 executes the full script path in seconds.
+
+PR 9: ``run`` returns a metrics dict (histogram-derived request-latency
+p50/p95/p99, queue-depth watermarks, batch/request counters from a
+:class:`repro.observe.MetricsRegistry` wired into the stream replay),
+which ``benchmarks.run`` persists as the ``"metrics"`` field of
+``BENCH_serve.json`` — the numbers the perf gate trends.
 """
 from __future__ import annotations
 
@@ -25,7 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import timed, train
-from repro import serve
+from repro import observe, serve
 from repro.api import ProblemSpec
 from repro.core import kernel_fns as kf, odm, sodm
 from repro.data import synthetic
@@ -111,11 +117,16 @@ def run(out, quick: bool = False):
                f"ladder={len(scorer.buckets)}")
     assert scorer.compiles <= len(scorer.buckets)
 
-    batcher = serve.Batcher(serve.MicrobatchScorer(comp, max_batch=64),
-                            max_batch=16, max_wait=1e-3)
+    registry = observe.MetricsRegistry()
+    batcher = serve.Batcher(serve.MicrobatchScorer(comp, max_batch=64,
+                                                   metrics=registry),
+                            max_batch=16, max_wait=1e-3, metrics=registry)
     arrivals = [(i * 1e-4, x_test[i % x_test.shape[0]])
                 for i in range(64 if quick else 512)]
     stats = serve.serve_stream(batcher, arrivals)
     out.append(f"serve,stream,n={len(stats['results'])},"
                f"mean_batch={stats['mean_batch']:.1f}_"
-               f"p50={stats['p50'] * 1e3:.2f}ms_p95={stats['p95'] * 1e3:.2f}ms")
+               f"p50={stats['p50'] * 1e3:.2f}ms_"
+               f"p95={stats['p95'] * 1e3:.2f}ms_"
+               f"p99={stats['p99'] * 1e3:.2f}ms")
+    return registry.snapshot()

@@ -1,0 +1,54 @@
+#!/usr/bin/env python
+"""CI perf gate: compare a bench run against committed baselines.
+
+Usage::
+
+    python scripts/bench_gate.py CURRENT_DIR BASELINE_DIR \
+        [--wall-rtol R] [--wall-floor-s S] [--bytes-rtol R]
+
+Exits 0 when every baseline bench is present and within the noise band,
+1 on any regression (see :mod:`repro.observe.trend` for the policy).
+Typical CI wiring::
+
+    python -m benchmarks.run --quick --out-dir bench_out
+    python scripts/bench_gate.py bench_out benchmarks/baselines
+
+No jax import — the gate itself runs anywhere Python does.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.observe import trend  # noqa: E402
+
+
+def main(argv: list[str] | None = None) -> int:
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("current_dir", help="directory of fresh BENCH_*.json")
+    p.add_argument("baseline_dir", help="directory of committed baselines")
+    p.add_argument("--wall-rtol", type=float, default=trend.WALL_RTOL,
+                   help="relative wall-clock noise band (default %(default)s)")
+    p.add_argument("--wall-floor-s", type=float, default=trend.WALL_FLOOR_S,
+                   help="absolute wall-clock slack in seconds")
+    p.add_argument("--bytes-rtol", type=float, default=trend.BYTES_RTOL,
+                   help="relative peak-bytes noise band")
+    p.add_argument("--bytes-floor", type=int, default=trend.BYTES_FLOOR,
+                   help="absolute peak-bytes slack")
+    args = p.parse_args(argv)
+
+    findings = trend.compare_dirs(
+        args.current_dir, args.baseline_dir,
+        wall_rtol=args.wall_rtol, wall_floor_s=args.wall_floor_s,
+        bytes_rtol=args.bytes_rtol, bytes_floor=args.bytes_floor)
+    print(trend.format_report(findings))
+    regressed = any(f.regressed for f in findings)
+    print("bench gate:", "FAIL" if regressed else "PASS")
+    return 1 if regressed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

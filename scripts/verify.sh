@@ -8,6 +8,9 @@
 #                              # analysis battery (tests/test_analysis.py)
 #   scripts/verify.sh chaos    # fault-injection battery only (the `chaos`
 #                              # marker: kill/resume + crash-window tests)
+#   scripts/verify.sh perf     # quick-tier benchmarks -> bench_out/, then
+#                              # the regression gate against the committed
+#                              # baselines (benchmarks/baselines/)
 #
 # Markers are registered in pytest.ini; tests/conftest.py also prepends
 # src/ to sys.path, but exporting PYTHONPATH here keeps subprocess-based
@@ -23,5 +26,9 @@ case "${1:-fast}" in
     exec python -m pytest -x -q tests/test_analysis.py -m "not slow"
     ;;
   chaos) exec python -m pytest -x -q -m chaos ;;
-  *) echo "usage: $0 [fast|tier1|lint|chaos]" >&2; exit 2 ;;
+  perf)
+    python -m benchmarks.run --quick --out-dir bench_out
+    exec python scripts/bench_gate.py bench_out benchmarks/baselines
+    ;;
+  *) echo "usage: $0 [fast|tier1|lint|chaos|perf]" >&2; exit 2 ;;
 esac

@@ -133,7 +133,7 @@ class Invariant:
 #: fault-tolerance / observability components under the PR 6 meta-coverage
 #: rule: each must carry >= 1 ``kind="component"`` declaration (asserted by
 #: tests/test_analysis.py alongside the kernel and route coverage)
-COMPONENTS = ("checkpoint", "faults", "resume", "tracker")
+COMPONENTS = ("checkpoint", "faults", "resume", "tracker", "observe")
 
 _REGISTRY: dict[str, Invariant] = {}
 
@@ -719,6 +719,96 @@ def _tracker_level_stream():
     return "tracker: per-level stream + summary, torn-tail-safe jsonl"
 
 
+def _observe_zero_cost_off():
+    """PR 9 span/instrument telemetry is zero-cost when off and inert
+    when on: (a) with no recorder installed ``span()`` returns the shared
+    no-op singleton; (b) a fit with tracker + trace_dir produces a
+    bitwise-identical model and the same number of level-solve launches
+    as a bare fit, and its exported trace is valid Chrome JSON with
+    cascade.level spans nested inside fit; (c) re-fitting the dsvrg route
+    with trace_dir adds zero new epoch-scan traces (trace-once holds
+    under tracing)."""
+    import dataclasses as dc
+    import json
+    import os
+    import tempfile
+
+    import numpy as np
+
+    from repro import observe
+    from repro.api import ODMEstimator, ProblemSpec
+    from repro.core import kernel_fns as kf
+    from repro.observe import spans as spans_mod
+
+    # (a) the off path allocates nothing per call
+    if spans_mod.current_recorder() is not None:
+        raise jl.InvariantViolation(
+            "a span recorder leaked in from a previous test")
+    if observe.span("a", k=1) is not observe.span("b"):
+        raise jl.InvariantViolation(
+            "span() with no recorder must return the shared no-op")
+
+    x, y = _toy_data(32, 4)
+    key = jax.random.PRNGKey(0)
+
+    # (b) sodm: instrumented fit == bare fit, launch-for-launch
+    problem = ProblemSpec(kernel=kf.KernelSpec(name="rbf", gamma=0.5))
+    cfg = _route_cfg("sodm")
+    solves = counter("sodm.level_solve")
+    n0 = solves.count
+    model_a, _ = ODMEstimator(problem, route="sodm", cfg=cfg).fit(
+        x, y, key)
+    bare_solves = solves.count - n0
+    with tempfile.TemporaryDirectory() as d:
+        n1 = solves.count
+        model_b, _ = ODMEstimator(problem, route="sodm", cfg=cfg).fit(
+            x, y, key, tracker=observe.MetricsRegistry(), trace_dir=d)
+        traced_solves = solves.count - n1
+        with open(os.path.join(d, "trace.json")) as f:
+            trace = json.load(f)
+    if traced_solves != bare_solves:
+        raise jl.InvariantViolation(
+            f"tracing changed the level-solve count: {bare_solves} bare "
+            f"vs {traced_solves} traced")
+    if not np.array_equal(np.asarray(model_a.coef),
+                          np.asarray(model_b.coef)):
+        raise jl.InvariantViolation(
+            "model fitted under tracker+trace_dir differs bitwise from "
+            "the bare fit")
+    events = trace["traceEvents"]
+    fits = [e for e in events if e["name"] == "fit"]
+    lvls = [e for e in events if e["name"] == "cascade.level"]
+    if len(fits) != 1 or not lvls:
+        raise jl.InvariantViolation(
+            f"expected 1 fit span and >=1 cascade.level spans, got "
+            f"{len(fits)}/{len(lvls)}")
+    f0 = fits[0]
+    for e in lvls:
+        if not (f0["ts"] <= e["ts"]
+                and e["ts"] + e["dur"] <= f0["ts"] + f0["dur"]):
+            raise jl.InvariantViolation(
+                "cascade.level span not contained in the fit span")
+
+    # (c) dsvrg trace-once survives tracing: a warm re-fit with trace_dir
+    # must add zero epoch-scan traces
+    lproblem = ProblemSpec(kernel=kf.KernelSpec(name="linear"))
+    lcfg = _route_cfg("dsvrg")
+    lcfg = dc.replace(lcfg, dsvrg=dc.replace(lcfg.dsvrg, epochs=2))
+    traces = counter("dsvrg.epoch_trace")
+    ODMEstimator(lproblem, route="dsvrg", cfg=lcfg).fit(x, y, key)  # warm
+    n2 = traces.count
+    with tempfile.TemporaryDirectory() as d:
+        ODMEstimator(lproblem, route="dsvrg", cfg=lcfg).fit(
+            x, y, key, trace_dir=d)
+    if traces.count != n2:
+        raise jl.InvariantViolation(
+            f"trace_dir fit retraced the dsvrg epoch scan "
+            f"({traces.count - n2} new traces)")
+    return ("observe: off-path is the shared no-op; traced sodm fit is "
+            "bitwise equal with equal launches and nested spans; dsvrg "
+            "stays trace-once")
+
+
 # ---------------------------------------------------------------------------
 # declarations
 # ---------------------------------------------------------------------------
@@ -816,6 +906,10 @@ def _declare_builtins() -> None:
         ("components.tracker.level_stream", "tracker",
          "per-level KKT/sweeps/SV/throughput records + fit summary; "
          "jsonl backend is torn-tail-safe", _tracker_level_stream),
+        ("components.observe.zero_cost_off", "observe",
+         "spans/instruments are no-ops when off; tracing a fit keeps it "
+         "bitwise identical, launch-for-launch, and dsvrg trace-once",
+         _observe_zero_cost_off),
     ]
     for name, subject, desc, fn in comp:
         declare(Invariant(name=name, subject=subject, kind="component",

@@ -32,7 +32,7 @@ from repro.api.spec import ProblemSpec
 from repro.core import kernel_fns as kf
 from repro.core import odm as odm_mod
 from repro.core.sodm import SODMConfig
-from repro.observe import profile_ctx
+from repro.observe import profile_ctx, span, trace_ctx
 from repro.serve import model as serve_model
 
 Array = jax.Array
@@ -88,6 +88,7 @@ class ODMEstimator:
 
     def fit(self, x: Array, y: Array, key: jax.Array | None = None, *,
             resume=None, faults=None, tracker=None, profile_dir=None,
+            trace_dir=None,
             **fit_kw) -> tuple[serve_model.FittedODM, FitReport]:
         """Train through the resolved route; returns (artifact, report).
 
@@ -109,6 +110,11 @@ class ODMEstimator:
             :mod:`repro.observe`); receives per-level / per-segment
             training metrics plus one final fit summary.
         profile_dir: write a JAX profiler trace of the solve there.
+        trace_dir: record host-side spans (fit → route → cascade.level /
+            dsvrg.segment, checkpoint commits) and export Chrome-trace
+            JSON to ``<trace_dir>/trace.json`` — open it in Perfetto.
+            Unlike resume/faults/tracker this works on every route (it
+            only wraps host code).
 
         Remaining ``fit_kw`` forward route-specific hooks (currently
         ``level_callback`` for the sodm route's legacy per-level
@@ -138,13 +144,17 @@ class ODMEstimator:
         auto = (entry.name == "dsvrg" and self.route is None
                 and self.cfg.engine != "dsvrg")
         t0 = time.perf_counter()
-        with profile_ctx(profile_dir):
-            out = entry.fit(self.problem, x, y, key, cfg=self.cfg,
-                            mesh=self.mesh, data_axis=self.data_axis,
-                            auto=auto, compile_kw=dict(self.compile_kw),
-                            fit_kw=fit_kw)
-            jax.block_until_ready(
-                out.model.w if out.model.w is not None else out.model.coef)
+        with trace_ctx(trace_dir), profile_ctx(profile_dir), \
+                span("fit", route=entry.name, n_train=M):
+            with span(f"route.{entry.name}", engine=self.cfg.engine):
+                out = entry.fit(self.problem, x, y, key, cfg=self.cfg,
+                                mesh=self.mesh, data_axis=self.data_axis,
+                                auto=auto, compile_kw=dict(self.compile_kw),
+                                fit_kw=fit_kw)
+            with span("fit.block_until_ready"):
+                jax.block_until_ready(
+                    out.model.w if out.model.w is not None
+                    else out.model.coef)
         wall = time.perf_counter() - t0
         report = FitReport(
             route=entry.name, engine=out.engine, algorithm=entry.algorithm,

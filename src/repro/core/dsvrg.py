@@ -62,6 +62,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core import odm
 from repro.core import partition as part_mod
 from repro.core.odm import ODMParams
+from repro.observe.spans import span as _span
 
 Array = jax.Array
 
@@ -346,7 +347,8 @@ def _segmented(runner, w0: Array, cfg: DSVRGConfig, M: int, *, perm: Array,
             faults.site("dsvrg.segment", epoch=done)
         n = min(seg, cfg.epochs - done)
         t0 = time.perf_counter()
-        w, h, eta = runner(w, n)
+        with _span("dsvrg.segment", epoch=done, epochs=n):
+            w, h, eta = runner(w, n)
         hist = h if hist is None else jnp.concatenate([hist, h])
         done += n
         if tracker is not None:

@@ -96,6 +96,7 @@ from repro.core import engines, kernel_fns as kf
 from repro.core import odm as odm_mod
 from repro.core import partition as part_mod
 from repro.core.odm import ODMParams
+from repro.observe.spans import span as _span
 
 Array = jax.Array
 
@@ -268,11 +269,12 @@ def _level_loop(run_level, x: Array, y: Array, perm: Array, cfg: SODMConfig,
                 faults.site("cascade.level", level=level, K=K)
             _LEVEL_SOLVE_COUNTER.bump((level, K))
             t0 = time.perf_counter()
-            xs = xp.reshape(K, m, -1)
-            ys = yp.reshape(K, m)
-            alphas, sweeps, kkts = run_level(xs, ys, alphas, K)
-            sweeps_per_level.append(int(jnp.max(sweeps)))
-            kkt = jnp.max(kkts)
+            with _span("cascade.level", level=level, K=K, m=m):
+                xs = xp.reshape(K, m, -1)
+                ys = yp.reshape(K, m)
+                alphas, sweeps, kkts = run_level(xs, ys, alphas, K)
+                sweeps_per_level.append(int(jnp.max(sweeps)))
+                kkt = jnp.max(kkts)
             if tracker is not None:
                 jax.block_until_ready(alphas)
                 wall = time.perf_counter() - t0

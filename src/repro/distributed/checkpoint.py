@@ -30,6 +30,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.observe.spans import span as _span
+
 SEP = "/"
 
 
@@ -105,6 +107,10 @@ class CheckpointManager:
             raise err
 
     def _write(self, step: int, host_tree, metadata: dict) -> str:
+        with _span("checkpoint.commit", step=step):
+            return self._write_inner(step, host_tree, metadata)
+
+    def _write_inner(self, step: int, host_tree, metadata: dict) -> str:
         final = os.path.join(self.dir, f"step_{step:010d}")
         tmp = final + f".tmp.{os.getpid()}"
         if os.path.exists(tmp):

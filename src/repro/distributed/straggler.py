@@ -29,6 +29,8 @@ import threading
 import time
 from typing import Any, Callable, Sequence
 
+from repro.observe.spans import span as _span
+
 
 @dataclasses.dataclass(frozen=True)
 class SpecConfig:
@@ -78,10 +80,12 @@ class SpeculativeScheduler:
                 att = attempts[i]
 
                 def wrapped():
-                    if faults is not None:
-                        faults.site("cascade.partition", partition=i,
-                                    attempt=att)
-                    out = tasks[i]()
+                    with _span("straggler.attempt", partition=i,
+                               attempt=att):
+                        if faults is not None:
+                            faults.site("cascade.partition", partition=i,
+                                        attempt=att)
+                        out = tasks[i]()
                     return out, time.monotonic() - t0
 
                 futures[pool.submit(wrapped)] = i

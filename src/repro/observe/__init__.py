@@ -1,10 +1,22 @@
-"""repro.observe — training observability: metric trackers + profiler hook.
+"""repro.observe — telemetry: trackers, spans, instruments, perf trend.
 
-The tracker protocol is deliberately tiny (levanter-style): a tracker is
-anything with ``log_metrics(step, metrics)``. The estimator feeds it
-per-level cascade statistics (KKT residual, objective, support-vector
-count, rows/s) and per-segment DSVRG progress, so margin-distribution
-training is observable instead of anecdotal.
+Four legs, all dependency-free on the host side:
+
+* **Trackers** (PR 7): a tracker is anything with
+  ``log_metrics(step, metrics)`` (levanter-style). The estimator feeds
+  it per-level cascade statistics (KKT residual, objective,
+  support-vector count, rows/s) and per-segment DSVRG progress.
+* **Spans** (PR 9): ``span(name, **attrs)`` times host-side regions —
+  fit → route → cascade level, request batch → score — and
+  ``trace_ctx(dir)`` exports them as Chrome-trace/Perfetto JSON next to
+  the ``jax.profiler`` device traces. Zero cost when no recorder is
+  installed.
+* **Instruments** (PR 9): counters, gauges, and fixed-bucket histograms
+  with exact nearest-rank p50/p95/p99; ``MetricsRegistry`` is itself a
+  tracker and drains back through any tracker backend.
+* **Trend** (PR 9): :mod:`repro.observe.trend` compares a directory of
+  ``BENCH_*.json`` records against committed baselines;
+  ``scripts/bench_gate.py`` turns that into a CI perf gate.
 """
 from repro.observe.tracker import (
     CompositeTracker,
@@ -14,6 +26,23 @@ from repro.observe.tracker import (
     read_jsonl,
 )
 from repro.observe.profiler import profile_ctx
+from repro.observe.spans import (
+    Span,
+    SpanRecorder,
+    current_recorder,
+    install,
+    span,
+    trace_ctx,
+)
+from repro.observe.instruments import (
+    DEFAULT_BUCKETS,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    percentile,
+)
+from repro.observe import trend
 
 __all__ = [
     "Tracker",
@@ -22,4 +51,17 @@ __all__ = [
     "CompositeTracker",
     "read_jsonl",
     "profile_ctx",
+    "Span",
+    "SpanRecorder",
+    "span",
+    "trace_ctx",
+    "install",
+    "current_recorder",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "percentile",
+    "DEFAULT_BUCKETS",
+    "trend",
 ]

@@ -30,6 +30,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.observe.instruments import MetricsRegistry, percentile
+from repro.observe.spans import span as _span
 from repro.serve.model import FittedODM
 
 Array = jax.Array
@@ -58,8 +60,10 @@ class MicrobatchScorer:
     """
 
     def __init__(self, model: FittedODM, max_batch: int = 256,
-                 buckets: tuple[int, ...] | None = None):
+                 buckets: tuple[int, ...] | None = None,
+                 metrics: MetricsRegistry | None = None):
         self.model = model
+        self.metrics = metrics
         self.buckets = tuple(sorted(buckets or _bucket_ladder(max_batch)))
         self.max_batch = self.buckets[-1]
         self.calls = 0
@@ -95,19 +99,27 @@ class MicrobatchScorer:
         self.calls += 1
         if B == 0:
             return jnp.zeros((0,), x.dtype)
-        outs = []
-        off = 0
-        while off < B:
-            n = min(B - off, self.max_batch)
-            bucket = self._bucket_for(n)
-            self._seen.add(bucket)
-            xb = x[off:off + n]
-            if n < bucket:
-                xb = jnp.pad(xb, ((0, bucket - n), (0, 0)))
-            o = self._score(xb, *self._margs)
-            outs.append(o if n == bucket else o[:n])
-            off += n
-        return outs[0] if len(outs) == 1 else jnp.concatenate(outs)
+        t0 = time.perf_counter()
+        with _span("serve.score", batch=B):
+            outs = []
+            off = 0
+            while off < B:
+                n = min(B - off, self.max_batch)
+                bucket = self._bucket_for(n)
+                self._seen.add(bucket)
+                xb = x[off:off + n]
+                if n < bucket:
+                    xb = jnp.pad(xb, ((0, bucket - n), (0, 0)))
+                o = self._score(xb, *self._margs)
+                outs.append(o if n == bucket else o[:n])
+                off += n
+            out = outs[0] if len(outs) == 1 else jnp.concatenate(outs)
+        if self.metrics is not None:
+            self.metrics.counter("serve.score.calls").inc()
+            self.metrics.histogram("serve.score.wall_s").observe(
+                time.perf_counter() - t0)
+            self.metrics.histogram("serve.score.batch").observe(B)
+        return out
 
     def predict(self, x: Array) -> Array:
         return jnp.sign(self.score(x))
@@ -146,10 +158,15 @@ class Batcher:
     """
 
     def __init__(self, scorer: MicrobatchScorer, max_batch: int = 64,
-                 max_wait: float = 2e-3, faults=None):
+                 max_wait: float = 2e-3, faults=None,
+                 metrics: MetricsRegistry | None = None):
         self.scorer = scorer
         self.max_batch = min(max_batch, scorer.max_batch)
         self.max_wait = max_wait
+        # instrument registry (repro.observe.MetricsRegistry): per-request
+        # latency + queue-wait histograms, queue-depth gauge, request /
+        # batch counters. None (default) records nothing.
+        self.metrics = metrics
         # fault-injection hook (repro.distributed.faults.FaultPlan): the
         # "serve.flush" site fires before scoring; with a virtual-clock
         # plan (sleeper=None) an injected delay shifts the batch's
@@ -165,6 +182,9 @@ class Batcher:
         rid = self._next_rid
         self._next_rid += 1
         self._pending.append(_Pending(rid, x, now))
+        if self.metrics is not None:
+            self.metrics.counter("serve.requests").inc()
+            self.metrics.gauge("serve.queue_depth").set(len(self._pending))
         return rid
 
     def ready(self, now: float | None = None) -> bool:
@@ -184,11 +204,19 @@ class Batcher:
                                 self._pending[self.max_batch:])
         if self.faults is not None:
             now += self.faults.site("serve.flush", batch=len(batch))
-        xb = jnp.stack([p.x for p in batch])
-        scores = jax.device_get(self.scorer.score(xb))
+        with _span("serve.request_batch", batch=len(batch)):
+            xb = jnp.stack([p.x for p in batch])
+            scores = jax.device_get(self.scorer.score(xb))
         self.batches.append(len(batch))
-        return [Completed(p.rid, float(s), p.t_arrival, now)
+        done = [Completed(p.rid, float(s), p.t_arrival, now)
                 for p, s in zip(batch, scores)]
+        if self.metrics is not None:
+            self.metrics.counter("serve.batches").inc()
+            self.metrics.gauge("serve.queue_depth").set(len(self._pending))
+            lat_h = self.metrics.histogram("serve.request.latency_s")
+            for c in done:
+                lat_h.observe(c.latency)
+        return done
 
     def poll(self, now: float | None = None) -> list[Completed]:
         now = time.monotonic() if now is None else now
@@ -205,7 +233,10 @@ def serve_stream(batcher: Batcher, arrivals, *, tick: float | None = None
     Virtual-clock replay: requests are submitted in arrival order and the
     batcher is polled at each arrival plus one final deadline tick, so
     results are independent of host timing. Returns
-    {results, latencies, batches, mean_batch, p50, p95}.
+    {results, latencies, batches, mean_batch, p50, p95, p99} — the
+    percentiles are exact nearest-rank (:func:`repro.observe.percentile`,
+    shared with the observe histograms; the old ``lat[n // 2]`` indexing
+    over-reported at even/small n).
     """
     results: list[Completed] = []
     t_last = 0.0
@@ -222,8 +253,9 @@ def serve_stream(batcher: Batcher, arrivals, *, tick: float | None = None
         "batches": list(batcher.batches),
         "mean_batch": (sum(batcher.batches) / len(batcher.batches)
                        if batcher.batches else 0.0),
-        "p50": lat[n // 2] if n else 0.0,
-        "p95": lat[min(n - 1, int(n * 0.95))] if n else 0.0,
+        "p50": percentile(lat, 50) if n else 0.0,
+        "p95": percentile(lat, 95) if n else 0.0,
+        "p99": percentile(lat, 99) if n else 0.0,
     }
 
 

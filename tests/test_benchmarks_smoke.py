@@ -37,9 +37,11 @@ def test_run_registry_covers_all_tables():
 
 
 def test_bench_persist_schema(tmp_path):
-    """ISSUE 7 satellite: `python -m benchmarks.run --quick --out-dir D`
-    persists a BENCH_<name>.json per bench with the v1 schema (route,
-    wall-clock, peak bytes, device kind) so CI runs leave artifacts."""
+    """ISSUE 7 satellite (schema bumped to v2 by ISSUE 9): `python -m
+    benchmarks.run --quick --out-dir D` persists a BENCH_<name>.json per
+    bench with route, wall-clock, peak bytes, device kind, and an
+    instrument-snapshot `metrics` dict, so CI runs leave artifacts the
+    perf gate can trend."""
     import json
     from benchmarks import run
 
@@ -48,13 +50,17 @@ def test_bench_persist_schema(tmp_path):
     path = tmp_path / "BENCH_kernels.json"
     assert path.exists()
     rec = json.loads(path.read_text())
-    assert rec["schema_version"] == 1
+    assert rec["schema_version"] == 2
     assert rec["bench"] == "kernels"
     assert rec["backend"] and rec["device_kind"] and rec["jax_version"]
     assert rec["wall_clock_s"] > 0
     assert isinstance(rec["peak_bytes"], int)    # 0 on CPU is fine
     assert rec["rows"] == len(rec["lines"]) > 0
     assert any(line.startswith("kernels,") for line in rec["lines"])
+    assert isinstance(rec["metrics"], dict)      # {} for metric-less benches
+    # the trend loader accepts what run.py persists
+    from repro.observe import trend
+    assert trend.load_dir(tmp_path)["kernels"]["bench"] == "kernels"
     # no torn temp file left behind
     assert not list(tmp_path.glob("*.tmp"))
 
@@ -147,7 +153,15 @@ def test_serve_bench_quick_executes():
     must stay inside the bucket ladder (asserted inside the script too)."""
     from benchmarks import serve_bench
     out = []
-    serve_bench.run(out, quick=True)
+    metrics = serve_bench.run(out, quick=True)
+    # ISSUE 9: the bench returns an instrument snapshot that lands in
+    # BENCH_serve.json's "metrics" field — histogram-derived latency
+    # percentiles plus request/batch accounting
+    for k in ("serve.request.latency_s.p50", "serve.request.latency_s.p95",
+              "serve.request.latency_s.p99", "serve.requests.count",
+              "serve.batches.count", "serve.queue_depth.max"):
+        assert k in metrics, k
+    assert metrics["serve.requests.count"] == 64
     summary = [line for line in out if "compressed_beats_dense" in line][0]
     assert summary.split(",")[3] == "1", summary
     peak = [line for line in out if line.startswith("serve,peak_bytes")][0]

@@ -1,0 +1,443 @@
+"""PR 9 telemetry tests: spans, instruments, trackers, trend gate.
+
+Everything here is host-only (no jax import, no device work) — the
+training/serving integration of the same pieces is pinned by
+``analysis.invariants`` (components.observe.zero_cost_off) and the bench
+smoke tier. Covers the ISSUE 9 satellites:
+
+* the shared nearest-rank percentile over known distributions (the
+  ``lat[n // 2]`` off-by-one regression);
+* JsonlTracker's persistent handle + torn-tail tolerance;
+* ``read_jsonl`` edge cases (empty / only-torn / interleaved writers);
+* Tracker runtime-protocol conformance for every backend, the draining
+  MetricsRegistry included;
+* the bench gate failing on an injected 10x slowdown and passing on an
+  unchanged run.
+"""
+import importlib.util
+import json
+import os
+import threading
+
+import pytest
+
+from repro import observe
+from repro.observe import trend
+
+
+# ---------------------------------------------------------------------------
+# percentile (satellite: serve_stream off-by-one fix)
+# ---------------------------------------------------------------------------
+
+class TestPercentile:
+    def test_known_distribution_1_to_100(self):
+        vals = list(range(1, 101))
+        assert observe.percentile(vals, 50) == 50
+        assert observe.percentile(vals, 95) == 95
+        assert observe.percentile(vals, 99) == 99
+        assert observe.percentile(vals, 0) == 1
+        assert observe.percentile(vals, 100) == 100
+
+    def test_even_small_n_median(self):
+        # THE regression: lat[n // 2] returned 3 (the 75th percentile)
+        # for n=4; nearest-rank p50 is the 2nd order statistic
+        assert observe.percentile([1, 2, 3, 4], 50) == 2
+        assert observe.percentile([1, 2, 3, 4], 95) == 4
+        assert observe.percentile([10, 20], 50) == 10
+
+    def test_single_element_and_unsorted(self):
+        assert observe.percentile([7.0], 50) == 7.0
+        assert observe.percentile([7.0], 99) == 7.0
+        assert observe.percentile([3, 1, 2], 50) == 2
+        sorted_in = [1, 2, 3]
+        observe.percentile(sorted_in, 95)
+        assert sorted_in == [1, 2, 3]      # never mutates the input
+
+    def test_nearest_rank_exactness(self):
+        # n=10: p90 is exactly the 9th order statistic, p91 the 10th
+        vals = list(range(10))
+        assert observe.percentile(vals, 90) == 8
+        assert observe.percentile(vals, 91) == 9
+
+    def test_errors(self):
+        with pytest.raises(ValueError):
+            observe.percentile([], 50)
+        with pytest.raises(ValueError):
+            observe.percentile([1.0], 101)
+
+
+# ---------------------------------------------------------------------------
+# spans
+# ---------------------------------------------------------------------------
+
+class TestSpans:
+    def test_off_path_is_shared_noop(self):
+        assert observe.current_recorder() is None
+        assert observe.span("a", x=1) is observe.span("b")
+
+    def test_record_and_nesting_by_containment(self):
+        rec = observe.SpanRecorder()
+        with observe.install(rec):
+            with observe.span("outer", level=2):
+                with observe.span("inner"):
+                    pass
+        outer, = rec.spans("outer")
+        inner, = rec.spans("inner")
+        assert outer["ph"] == inner["ph"] == "X"
+        assert outer["args"] == {"level": 2}
+        assert outer["ts"] <= inner["ts"]
+        assert inner["ts"] + inner["dur"] <= outer["ts"] + outer["dur"]
+        assert outer["tid"] == inner["tid"]
+
+    def test_install_restores_previous(self):
+        r1, r2 = observe.SpanRecorder(), observe.SpanRecorder()
+        with observe.install(r1):
+            with observe.install(r2):
+                with observe.span("in2"):
+                    pass
+            with observe.span("in1"):
+                pass
+        assert observe.current_recorder() is None
+        assert len(r2.spans("in2")) == 1 and not r2.spans("in1")
+        assert len(r1.spans("in1")) == 1 and not r1.spans("in2")
+
+    def test_worker_threads_record_with_own_tid(self):
+        rec = observe.SpanRecorder()
+
+        def work():
+            with observe.span("worker"):
+                pass
+
+        with observe.install(rec):
+            t = threading.Thread(target=work)
+            t.start()
+            t.join()
+            with observe.span("main"):
+                pass
+        tids = {e["tid"] for e in rec.events()}
+        assert len(tids) == 2
+
+    def test_span_recorded_even_when_body_raises(self):
+        rec = observe.SpanRecorder()
+        with observe.install(rec):
+            with pytest.raises(RuntimeError):
+                with observe.span("boom"):
+                    raise RuntimeError
+        assert len(rec.spans("boom")) == 1
+
+    def test_export_valid_chrome_trace(self, tmp_path):
+        rec = observe.SpanRecorder()
+        with observe.install(rec), observe.span("fit", route="sodm"):
+            pass
+        path = rec.export(tmp_path / "deep" / "trace.json")
+        doc = json.loads(open(path).read())
+        assert doc["displayTimeUnit"] == "ms"
+        ev, = doc["traceEvents"]
+        assert set(ev) >= {"name", "ph", "ts", "dur", "pid", "tid"}
+        assert not list((tmp_path / "deep").glob("*.tmp"))
+
+    def test_trace_ctx_none_is_noop(self):
+        with observe.trace_ctx(None) as rec:
+            assert rec is None
+            assert observe.current_recorder() is None
+
+    def test_trace_ctx_exports_even_on_raise(self, tmp_path):
+        with pytest.raises(RuntimeError):
+            with observe.trace_ctx(tmp_path):
+                with observe.span("partial"):
+                    pass
+                raise RuntimeError
+        doc = json.loads((tmp_path / "trace.json").read_text())
+        assert [e["name"] for e in doc["traceEvents"]] == ["partial"]
+        assert observe.current_recorder() is None
+
+    def test_nonjson_attrs_coerced(self):
+        rec = observe.SpanRecorder()
+        with observe.install(rec), observe.span("s", obj=object(), f=1.5):
+            pass
+        args = rec.events()[0]["args"]
+        json.dumps(args)                     # must be serialisable
+        assert args["f"] == 1.5
+
+
+# ---------------------------------------------------------------------------
+# instruments
+# ---------------------------------------------------------------------------
+
+class TestInstruments:
+    def test_counter_gauge(self):
+        c = observe.Counter("req")
+        c.inc(); c.inc(3)
+        assert c.snapshot() == {"req.count": 4}
+        g = observe.Gauge("depth")
+        assert g.snapshot() == {}
+        g.set(5); g.set(2); g.set(3)
+        assert g.snapshot() == {"depth": 3, "depth.min": 2, "depth.max": 5}
+
+    def test_histogram_exact_percentiles(self):
+        h = observe.Histogram("lat")
+        for v in range(1, 101):
+            h.observe(v)
+        snap = h.snapshot()
+        assert snap["lat.count"] == 100
+        assert snap["lat.p50"] == 50
+        assert snap["lat.p95"] == 95
+        assert snap["lat.p99"] == 99
+        assert snap["lat.min"] == 1 and snap["lat.max"] == 100
+        assert snap["lat.mean"] == pytest.approx(50.5)
+
+    def test_histogram_bucket_counts_stay_exact_past_cap(self):
+        h = observe.Histogram("x", buckets=(1.0, 10.0), max_samples=64)
+        for i in range(1000):
+            h.observe(0.5 if i % 2 else 5.0)
+        assert h.n == 1000
+        assert sum(h.counts) == 1000           # bucket counts never sampled
+        assert len(h.samples) <= 64
+        assert h.percentile(50) in (0.5, 5.0)  # sampled, still plausible
+
+    def test_registry_get_or_create_and_type_conflict(self):
+        m = observe.MetricsRegistry()
+        assert m.counter("a") is m.counter("a")
+        with pytest.raises(TypeError):
+            m.gauge("a")
+
+    def test_registry_log_metrics_observes_numerics_only(self):
+        m = observe.MetricsRegistry()
+        m.log_metrics(0, {"kkt": 0.5, "route": "sodm", "done": True})
+        m.log_metrics(1, {"kkt": 1.5})
+        snap = m.snapshot()
+        assert snap["kkt.count"] == 2
+        assert snap["kkt.p50"] == 0.5
+        assert "route.count" not in snap and "done.count" not in snap
+
+    def test_registry_drains_through_any_tracker(self, tmp_path):
+        m = observe.MetricsRegistry()
+        m.histogram("lat").observe(1.0)
+        m.counter("req").inc(2)
+        mem = observe.InMemoryTracker()
+        path = tmp_path / "drain.jsonl"
+        with observe.JsonlTracker(path) as jt:
+            snap = m.drain(observe.CompositeTracker([mem, jt]), step=7)
+        assert mem.steps[0][0] == 7
+        assert mem.latest()["req.count"] == 2
+        rec, = observe.read_jsonl(path)
+        assert rec["step"] == 7 and rec["lat.p99"] == 1.0
+        assert snap["lat.count"] == 1
+
+    def test_snapshot_folds_in_invariant_counters(self):
+        from repro.analysis import invariants as inv
+        inv.counter("observe.test_counter").bump()
+        m = observe.MetricsRegistry()
+        snap = m.snapshot(include_counters=True)
+        assert snap["counter.observe.test_counter.count"] >= 1
+        assert "counter.observe.test_counter.count" not in m.snapshot()
+
+
+# ---------------------------------------------------------------------------
+# tracker backends (protocol conformance + jsonl lifecycle)
+# ---------------------------------------------------------------------------
+
+class TestTrackerBackends:
+    def test_runtime_protocol_conformance(self, tmp_path):
+        backends = [
+            observe.InMemoryTracker(),
+            observe.JsonlTracker(tmp_path / "t.jsonl"),
+            observe.CompositeTracker([]),
+            observe.MetricsRegistry(),
+        ]
+        for b in backends:
+            assert isinstance(b, observe.Tracker), type(b).__name__
+        class Nope:
+            pass
+        assert not isinstance(Nope(), observe.Tracker)
+
+    def test_jsonl_persistent_handle(self, tmp_path):
+        path = tmp_path / "m.jsonl"
+        t = observe.JsonlTracker(path)
+        assert t._file is None                 # lazy: no file until logged
+        t.log_metrics(0, {"a": 1})
+        f0 = t._file
+        t.log_metrics(1, {"a": 2})
+        assert t._file is f0                   # ONE handle across calls
+        # every line is already durable before close
+        assert [r["a"] for r in observe.read_jsonl(path)] == [1, 2]
+        t.close()
+        assert t._file is None
+        t.log_metrics(2, {"a": 3})             # reopens transparently
+        t.close()
+        assert len(observe.read_jsonl(path)) == 3
+
+    def test_jsonl_context_manager_closes(self, tmp_path):
+        path = tmp_path / "m.jsonl"
+        with observe.JsonlTracker(path) as t:
+            t.log_metrics(0, {"x": 1.0})
+            assert t._file is not None
+        assert t._file is None
+
+    def test_jsonl_torn_tail_still_tolerated(self, tmp_path):
+        """Regression for the persistent-handle change: a torn final line
+        (killed writer) must still be skipped by read_jsonl."""
+        path = tmp_path / "m.jsonl"
+        t = observe.JsonlTracker(path)
+        for i in range(3):
+            t.log_metrics(i, {"v": i})
+        t.close()
+        with open(path, "a") as f:
+            f.write('{"step": 99, "v": tor')   # no newline, invalid json
+        recs = observe.read_jsonl(path)
+        assert [r["step"] for r in recs] == [0, 1, 2]
+
+
+class TestReadJsonlEdgeCases:
+    def test_empty_file(self, tmp_path):
+        path = tmp_path / "e.jsonl"
+        path.write_text("")
+        assert observe.read_jsonl(path) == []
+
+    def test_only_torn_lines(self, tmp_path):
+        path = tmp_path / "torn.jsonl"
+        path.write_text('{"a": \n{"b"\nnot json at all\n')
+        assert observe.read_jsonl(path) == []
+
+    def test_blank_lines_skipped(self, tmp_path):
+        path = tmp_path / "b.jsonl"
+        path.write_text('\n{"step": 0}\n\n{"step": 1}\n')
+        assert [r["step"] for r in observe.read_jsonl(path)] == [0, 1]
+
+    def test_interleaved_writers(self, tmp_path):
+        """Two trackers appending to one path: O_APPEND + one write per
+        line means whole lines interleave and nothing is lost."""
+        path = tmp_path / "shared.jsonl"
+        a = observe.JsonlTracker(path)
+        b = observe.JsonlTracker(path)
+        for i in range(5):
+            a.log_metrics(i, {"w": "a"})
+            b.log_metrics(i, {"w": "b"})
+        a.close(); b.close()
+        recs = observe.read_jsonl(path)
+        assert len(recs) == 10
+        assert {r["w"] for r in recs} == {"a", "b"}
+        assert sorted(r["step"] for r in recs if r["w"] == "a") == \
+            list(range(5))
+
+
+# ---------------------------------------------------------------------------
+# trend + bench gate
+# ---------------------------------------------------------------------------
+
+def _bench_record(name="serve", wall=1.0, peak=1 << 24, rows=3,
+                  backend="cpu", device="cpu", metrics=None):
+    return {"schema_version": 2, "bench": name, "device_kind": device,
+            "backend": backend, "jax_version": "0.0.test",
+            "wall_clock_s": wall, "peak_bytes": peak, "rows": rows,
+            "lines": ["x"] * rows, "metrics": metrics or {}}
+
+
+def _write_dir(d, *recs):
+    os.makedirs(d, exist_ok=True)
+    for r in recs:
+        with open(os.path.join(d, f"BENCH_{r['bench']}.json"), "w") as f:
+            json.dump(r, f)
+    return d
+
+
+def _gate_main():
+    spec = importlib.util.spec_from_file_location(
+        "bench_gate", os.path.join(os.path.dirname(__file__), "..",
+                                   "scripts", "bench_gate.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod.main
+
+
+class TestTrendGate:
+    def test_identical_run_passes(self, tmp_path):
+        base = _write_dir(tmp_path / "base", _bench_record())
+        cur = _write_dir(tmp_path / "cur", _bench_record())
+        findings = trend.compare_dirs(cur, base)
+        assert not any(f.regressed for f in findings)
+        assert _gate_main()([str(cur), str(base)]) == 0
+
+    def test_injected_10x_slowdown_fails(self, tmp_path):
+        """The ISSUE 9 acceptance criterion: 10x wall-clock must trip the
+        gate; the same 10x on different hardware only warns."""
+        base = _write_dir(tmp_path / "base", _bench_record(wall=1.0))
+        cur = _write_dir(tmp_path / "cur", _bench_record(wall=10.0))
+        findings = trend.compare_dirs(cur, base)
+        bad = [f for f in findings if f.regressed]
+        assert [f.field for f in bad] == ["wall_clock_s"]
+        assert _gate_main()([str(cur), str(base)]) == 1
+
+    def test_noise_band_absorbs_small_jitter(self, tmp_path):
+        # +60% on a 50ms bench: inside both the 2x band and the absolute
+        # floor — the gate must not flake on scheduler noise
+        base = _write_dir(tmp_path / "base", _bench_record(wall=0.05))
+        cur = _write_dir(tmp_path / "cur", _bench_record(wall=0.08))
+        assert not any(f.regressed
+                       for f in trend.compare_dirs(cur, base))
+
+    def test_cross_hardware_slowdown_demoted_to_warn(self, tmp_path):
+        base = _write_dir(tmp_path / "base",
+                          _bench_record(wall=1.0, backend="tpu",
+                                        device="TPU v4"))
+        cur = _write_dir(tmp_path / "cur", _bench_record(wall=10.0))
+        findings = trend.compare_dirs(cur, base)
+        walls = [f for f in findings if f.field == "wall_clock_s"]
+        assert walls and all(f.level == "warn" for f in walls)
+        assert not any(f.regressed for f in findings)
+
+    def test_missing_bench_is_a_regression(self, tmp_path):
+        base = _write_dir(tmp_path / "base", _bench_record("serve"),
+                          _bench_record("kernels"))
+        cur = _write_dir(tmp_path / "cur", _bench_record("serve"))
+        findings = trend.compare_dirs(cur, base)
+        gone = [f for f in findings if f.regressed]
+        assert len(gone) == 1 and gone[0].bench == "kernels" \
+            and gone[0].field == "presence"
+
+    def test_new_bench_without_baseline_warns_only(self, tmp_path):
+        base = _write_dir(tmp_path / "base", _bench_record("serve"))
+        cur = _write_dir(tmp_path / "cur", _bench_record("serve"),
+                         _bench_record("fresh"))
+        findings = trend.compare_dirs(cur, base)
+        assert not any(f.regressed for f in findings)
+        assert any(f.bench == "fresh" and f.level == "warn"
+                   for f in findings)
+
+    def test_metric_percentiles_gated_like_wall_clock(self, tmp_path):
+        m_base = {"serve.request.latency_s.p99": 0.01,
+                  "serve.requests.count": 64}
+        m_cur = {"serve.request.latency_s.p99": 5.0,
+                 "serve.requests.count": 64}
+        base = _write_dir(tmp_path / "base",
+                          _bench_record(metrics=m_base))
+        cur = _write_dir(tmp_path / "cur", _bench_record(metrics=m_cur))
+        findings = trend.compare_dirs(cur, base)
+        bad = {f.field for f in findings if f.regressed}
+        assert bad == {"metrics.serve.request.latency_s.p99"}
+
+    def test_empty_rows_fails(self, tmp_path):
+        base = _write_dir(tmp_path / "base", _bench_record(rows=3))
+        cur = _write_dir(tmp_path / "cur", _bench_record(rows=0))
+        findings = trend.compare_dirs(cur, base)
+        assert any(f.regressed and f.field == "rows" for f in findings)
+
+    def test_no_baselines_raises(self, tmp_path):
+        cur = _write_dir(tmp_path / "cur", _bench_record())
+        os.makedirs(tmp_path / "base")
+        with pytest.raises(FileNotFoundError):
+            trend.compare_dirs(cur, tmp_path / "base")
+
+    def test_unknown_schema_rejected(self, tmp_path):
+        rec = _bench_record()
+        rec["schema_version"] = 99
+        d = _write_dir(tmp_path / "v", rec)
+        with pytest.raises(ValueError):
+            trend.load_dir(d)
+
+    def test_format_report_orders_failures_first(self, tmp_path):
+        base = _write_dir(tmp_path / "base", _bench_record(wall=1.0))
+        cur = _write_dir(tmp_path / "cur", _bench_record(wall=10.0))
+        report = trend.format_report(trend.compare_dirs(cur, base))
+        assert "1 regression(s)" in report.splitlines()[0]
+        assert "[FAIL]" in report.splitlines()[1]

@@ -353,6 +353,48 @@ class TestBatcher:
             assert abs(got[i] - float(want[i % x.shape[0]])) < 1e-5
         assert stats["mean_batch"] > 1.0        # batching actually happened
 
+    def test_stream_percentiles_nearest_rank(self):
+        """PR 9 regression: p50/p95/p99 are exact nearest-rank over the
+        latency sample, not the old lat[n // 2] indexing."""
+        from repro import observe
+        model, x = _small_model()
+        b = serve.Batcher(serve.MicrobatchScorer(model, max_batch=32),
+                          max_batch=8, max_wait=1e-3)
+        stats = serve.serve_stream(
+            b, ((i * 1e-4, x[i % x.shape[0]]) for i in range(40)))
+        lat = stats["latencies"]
+        assert stats["p50"] == observe.percentile(lat, 50)
+        assert stats["p95"] == observe.percentile(lat, 95)
+        assert stats["p99"] == observe.percentile(lat, 99)
+        assert stats["p50"] <= stats["p95"] <= stats["p99"] <= max(lat)
+
+    def test_request_batch_contains_score_span(self):
+        """PR 9 acceptance: a traced serve replay emits nested
+        serve.request_batch -> serve.score spans, and the metrics
+        registry sees every request's latency."""
+        from repro import observe
+        model, x = _small_model()
+        reg = observe.MetricsRegistry()
+        b = serve.Batcher(
+            serve.MicrobatchScorer(model, max_batch=32, metrics=reg),
+            max_batch=8, max_wait=1e-3, metrics=reg)
+        rec = observe.SpanRecorder()
+        with observe.install(rec):
+            serve.serve_stream(
+                b, ((i * 1e-4, x[i % x.shape[0]]) for i in range(24)))
+        outer = rec.spans("serve.request_batch")
+        inner = rec.spans("serve.score")
+        assert outer and len(inner) >= len(outer)
+        for s in inner:         # every score sits inside some batch span
+            assert any(o["ts"] <= s["ts"] and
+                       s["ts"] + s["dur"] <= o["ts"] + o["dur"]
+                       for o in outer)
+        snap = reg.snapshot()
+        assert snap["serve.request.latency_s.count"] == 24
+        assert snap["serve.requests.count"] == 24
+        assert snap["serve.batches.count"] == len(outer)
+        assert snap["serve.queue_depth.max"] >= 1
+
 
 class TestShardedScoring:
     def test_single_device_mesh_matches(self):
