@@ -31,9 +31,9 @@ import os
 import sys
 import time
 
-from benchmarks import (fig2_speedup, fig4_gradient, kernels_bench,
-                        roofline_report, serve_bench, table2_rbf,
-                        table3_linear, table4_svm)
+from benchmarks import (data_bench, fig2_speedup, fig4_gradient,
+                        kernels_bench, roofline_report, serve_bench,
+                        table2_rbf, table3_linear, table4_svm)
 
 ALL = {
     "table2": table2_rbf.run,
@@ -44,6 +44,7 @@ ALL = {
     "kernels": kernels_bench.run,
     "roofline": roofline_report.run,
     "serve": serve_bench.run,
+    "data": data_bench.run,
 }
 
 # how each bench spells "toy scale" (run() signatures differ)
@@ -54,6 +55,7 @@ _QUICK_KW = {
     "fig4": {"datasets": [("a7a", 0.01)]},
     "kernels": {"quick": True},
     "serve": {"quick": True},
+    "data": {"quick": True},
 }
 
 

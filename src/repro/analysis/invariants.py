@@ -133,7 +133,8 @@ class Invariant:
 #: fault-tolerance / observability components under the PR 6 meta-coverage
 #: rule: each must carry >= 1 ``kind="component"`` declaration (asserted by
 #: tests/test_analysis.py alongside the kernel and route coverage)
-COMPONENTS = ("checkpoint", "faults", "resume", "tracker", "observe")
+COMPONENTS = ("checkpoint", "data", "faults", "resume", "tracker",
+              "observe")
 
 _REGISTRY: dict[str, Invariant] = {}
 
@@ -809,6 +810,79 @@ def _observe_zero_cost_off():
             "stays trace-once")
 
 
+def _data_stream_loader():
+    """The out-of-core data plane's contract: (a) slab contents are a
+    pure function of the rows, bitwise invariant to how the source is
+    sharded; (b) every shard is read exactly once per pass and the rows
+    counter/depth gauge account truthfully (depth never exceeds the
+    configured bound); (c) the byte accountant's peak stays below the
+    dataset size for a multi-shard source (the loader never materializes
+    the whole set); (d) a kill at the ``data.prefetch`` site surfaces
+    out of the consuming iteration as Preemption."""
+    import numpy as np
+
+    from repro.data import streaming as ds
+    from repro.distributed import faults as fm
+    from repro.observe import MetricsRegistry
+
+    rng = np.random.default_rng(0)
+    M, d, slab = 96, 5, 32
+    x = rng.normal(size=(M, d)).astype(np.float32)
+    y = np.where(rng.random(M) < 0.5, -1.0, 1.0).astype(np.float32)
+
+    def slabs(shard_rows):
+        src = ds.ArraySource(x, y, shard_rows=shard_rows)
+        acct = ds.ByteAccountant()
+        mets = MetricsRegistry()
+        out = [(np.asarray(s.x).copy(), np.asarray(s.y).copy(), s.n_valid)
+               for s in ds.iter_slabs(src, slab, depth=2, metrics=mets,
+                                      executor=ds.SerialExecutor(),
+                                      accountant=acct)]
+        return src, acct, mets, out
+
+    src_a, acct, mets, a = slabs(16)
+    _, _, _, b = slabs(24)          # misaligned: shards straddle slabs
+    for (xa, ya, na), (xb, yb, nb) in zip(a, b, strict=True):
+        if not (np.array_equal(xa, xb) and np.array_equal(ya, yb)
+                and na == nb):
+            raise jl.InvariantViolation(
+                "slab contents depend on the shard layout — streaming "
+                "results would not be reproducible across re-sharding")
+    if src_a.reads != [1] * len(src_a.reads):
+        raise jl.InvariantViolation(
+            f"one pass must read each shard exactly once: {src_a.reads}")
+    snap = mets.snapshot()
+    if snap.get("data.rows.count") != M:
+        raise jl.InvariantViolation(
+            f"rows counter lies: {snap.get('data.rows.count')} != {M}")
+    if snap.get("data.prefetch.depth.max", 0) > 2:
+        raise jl.InvariantViolation(
+            f"prefetch queue exceeded its depth bound: "
+            f"{snap['data.prefetch.depth.max']} > 2")
+    if snap.get("data.shard.read_s.count") != len(src_a.reads):
+        raise jl.InvariantViolation(
+            f"shard-read histogram count "
+            f"{snap.get('data.shard.read_s.count')} != shard count")
+    if not 0 < acct.peak < src_a.total_bytes:
+        raise jl.InvariantViolation(
+            f"accountant peak {acct.peak} not inside (0, "
+            f"{src_a.total_bytes}) — the loader materialized the set")
+    plan = fm.FaultPlan().kill("data.prefetch", shard=2)
+    src_c = ds.ArraySource(x, y, shard_rows=16)
+    try:
+        for _ in ds.iter_slabs(src_c, slab, faults=plan,
+                               executor=ds.SerialExecutor()):
+            pass
+    except fm.Preemption as e:
+        if e.info.get("shard") != 2:
+            raise jl.InvariantViolation(f"kill struck shard {e.info}")
+    else:
+        raise jl.InvariantViolation(
+            "a data.prefetch kill never surfaced from the iteration")
+    return ("data: slabs layout-invariant, single-read passes, honest "
+            "gauges, bounded resident bytes, kills propagate")
+
+
 # ---------------------------------------------------------------------------
 # declarations
 # ---------------------------------------------------------------------------
@@ -910,6 +984,11 @@ def _declare_builtins() -> None:
          "spans/instruments are no-ops when off; tracing a fit keeps it "
          "bitwise identical, launch-for-launch, and dsvrg trace-once",
          _observe_zero_cost_off),
+        ("components.data.stream_loader", "data",
+         "slabs are bitwise layout-invariant; one read per shard per "
+         "pass; depth/rows instruments honest; resident bytes bounded "
+         "below the dataset; prefetch kills propagate",
+         _data_stream_loader),
     ]
     for name, subject, desc, fn in comp:
         declare(Invariant(name=name, subject=subject, kind="component",

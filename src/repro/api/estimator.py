@@ -85,12 +85,22 @@ class ODMEstimator:
     #: routes with a resume/faults/tracker seam (the paper's two regimes;
     #: the Section-4 baselines have no mid-solve state worth persisting)
     INSTRUMENTED_ROUTES = ("dsvrg", "sodm")
+    #: same seam on the streaming path — the cascade gains it there (its
+    #: merge stack checkpoints per leaf as shards arrive)
+    STREAM_INSTRUMENTED_ROUTES = ("dsvrg", "cascade")
 
-    def fit(self, x: Array, y: Array, key: jax.Array | None = None, *,
-            resume=None, faults=None, tracker=None, profile_dir=None,
+    def fit(self, x, y: Array | None = None, key: jax.Array | None = None,
+            *, resume=None, faults=None, tracker=None, profile_dir=None,
             trace_dir=None,
             **fit_kw) -> tuple[serve_model.FittedODM, FitReport]:
         """Train through the resolved route; returns (artifact, report).
+
+        ``x`` is either a dense ``(M, d)`` feature matrix with ``y`` its
+        ±1 labels, or a :class:`repro.data.streaming.ShardedSource` (with
+        ``y`` omitted — a source carries its own labels). A source
+        streams through an out-of-core route (dsvrg for linear kernels,
+        cascade otherwise; see ``registry.streaming_routes``) without
+        ever materializing the (M, d) matrix.
 
         Preemption-proofing and observability (sodm / dsvrg routes only —
         other routes raise rather than silently ignore these):
@@ -120,21 +130,43 @@ class ODMEstimator:
         ``level_callback`` for the sodm route's legacy per-level
         checkpointing seam).
         """
-        x, y = self.problem.validate(x, y)
+        from repro.data.streaming import is_source
+        streaming = is_source(x)
+        if streaming:
+            if y is not None:
+                raise ValueError(
+                    "fit(source) carries its own labels — passing y "
+                    "alongside a ShardedSource is ambiguous; drop y")
+            self.problem.validate_source(x)
+            M = int(x.n_rows)
+        else:
+            x, y = self.problem.validate(x, y)
+            M = int(x.shape[0])
         key = jax.random.PRNGKey(0) if key is None else key
-        M = int(x.shape[0])
         entry = registry.resolve(self.problem, M, mesh=self.mesh,
-                                 route=self.route, cfg=self.cfg)
-        if entry.name not in self.INSTRUMENTED_ROUTES:
+                                 route=self.route, cfg=self.cfg,
+                                 streaming=streaming)
+        instrumented = self.STREAM_INSTRUMENTED_ROUTES if streaming \
+            else self.INSTRUMENTED_ROUTES
+        if entry.name not in instrumented:
             bad = [n for n, v in (("resume", resume), ("faults", faults),
                                   ("tracker", tracker)) if v is not None]
             if bad:
                 raise ValueError(
                     f"route {entry.name!r} has no {'/'.join(bad)} seam — "
-                    f"instrumented routes: {list(self.INSTRUMENTED_ROUTES)}")
+                    f"instrumented routes: {list(instrumented)}")
+        if not streaming:
+            loader_kw = [k for k in ("depth", "executor", "metrics",
+                                     "accountant") if k in fit_kw]
+            if loader_kw:
+                raise ValueError(
+                    f"{'/'.join(loader_kw)} are streaming loader knobs — "
+                    f"they only apply to fit(source); a dense fit has no "
+                    f"prefetch loader to configure")
         if resume is not None:
             fit_kw["resume"] = self._resume_manager(entry.name, resume,
-                                                    x, y, key, faults)
+                                                    x, y, key, faults,
+                                                    streaming=streaming)
         if faults is not None:
             fit_kw["faults"] = faults
         if tracker is not None:
@@ -145,7 +177,8 @@ class ODMEstimator:
                 and self.cfg.engine != "dsvrg")
         t0 = time.perf_counter()
         with trace_ctx(trace_dir), profile_ctx(profile_dir), \
-                span("fit", route=entry.name, n_train=M):
+                span("fit", route=entry.name, n_train=M,
+                     streaming=streaming):
             with span(f"route.{entry.name}", engine=self.cfg.engine):
                 out = entry.fit(self.problem, x, y, key, cfg=self.cfg,
                                 mesh=self.mesh, data_axis=self.data_axis,
@@ -174,15 +207,22 @@ class ODMEstimator:
         return out.model, report
 
     def _resume_manager(self, route: str, resume, x: Array, y: Array,
-                        key: jax.Array, faults):
+                        key: jax.Array, faults, streaming: bool = False):
         """Build the route's resume manager, fingerprinting THIS fit's
         (kernel, params, cfg, data, key) so a stale directory is rejected
-        instead of splicing foreign duals into the solve."""
+        instead of splicing foreign duals into the solve. A streaming fit
+        fingerprints the *source* (``source.fingerprint()``) instead of
+        summing data nobody wants resident."""
         from repro.distributed import resume as resume_mod
         rc = resume_mod.ResumeConfig.of(resume)
-        prov = resume_mod.provenance(self.problem.kernel,
-                                     self.problem.params, self.cfg,
-                                     x, y, key)
+        if streaming:
+            prov = resume_mod.provenance_source(self.problem.kernel,
+                                                self.problem.params,
+                                                self.cfg, x, key)
+        else:
+            prov = resume_mod.provenance(self.problem.kernel,
+                                         self.problem.params, self.cfg,
+                                         x, y, key)
         cls = (resume_mod.DsvrgResumeManager if route == "dsvrg"
                else resume_mod.CascadeResumeManager)
         return cls(rc, prov, faults=faults)

@@ -86,6 +86,7 @@ class SolverEntry:
     kernels: frozenset[str] | None = None   # None = every KernelSpec family
     mesh_aware: bool = False           # has an SPMD (shard_map) driver
     matrix_free: bool = False          # never materializes O(m^2) state
+    streaming: bool = False            # consumes a ShardedSource out-of-core
     scale_min: int = 0                 # auto-dispatch band (advisory)
     scale_max: int | None = None
     description: str = ""
@@ -98,10 +99,12 @@ class SolverEntry:
             (f"{self.scale_max}]" if self.scale_max is not None else "inf)")
         return (f"{self.name}: {self.algorithm}; {kern}; "
                 f"mesh_aware={self.mesh_aware}; "
-                f"matrix_free={self.matrix_free}; {band}")
+                f"matrix_free={self.matrix_free}; "
+                f"streaming={self.streaming}; {band}")
 
     def check(self, kernel_name: str, M: int,
-              mesh: jax.sharding.Mesh | None = None) -> None:
+              mesh: jax.sharding.Mesh | None = None,
+              streaming: bool = False) -> None:
         """Raise ``ValueError`` (listing capabilities) on incompatibility."""
         if self.kernels is not None and kernel_name not in self.kernels:
             raise ValueError(
@@ -115,6 +118,16 @@ class SolverEntry:
                 f"given — its capabilities: {self.capabilities()}. "
                 f"Mesh-aware routes: "
                 f"{[e.name for e in _REGISTRY.values() if e.mesh_aware]}")
+        if streaming and not self.streaming:
+            raise ValueError(
+                f"route {self.name!r} cannot train from a ShardedSource — "
+                f"its capabilities: {self.capabilities()}. Streaming routes: "
+                f"{streaming_routes()}")
+        if streaming and mesh is not None:
+            raise ValueError(
+                "streaming fits have no SPMD driver yet (ROADMAP open "
+                "item 2: mesh-sharded shard ingestion) — drop the mesh or "
+                "materialize the source")
 
 
 _REGISTRY: dict[str, SolverEntry] = {}
@@ -156,6 +169,11 @@ def supporting(kernel_name: str) -> list[str]:
             if e.kernels is None or kernel_name in e.kernels]
 
 
+def streaming_routes() -> list[str]:
+    """Route names that can consume a ShardedSource out-of-core."""
+    return [e.name for e in _REGISTRY.values() if e.streaming]
+
+
 def capability_table() -> str:
     """All routes, one capability line each (README / error helper)."""
     return "\n".join(_REGISTRY[n].capabilities() for n in routes())
@@ -166,11 +184,13 @@ def capability_table() -> str:
 # ---------------------------------------------------------------------------
 
 def resolve(problem, M: int, mesh: jax.sharding.Mesh | None = None,
-            route: str | None = None, cfg=None) -> SolverEntry:
+            route: str | None = None, cfg=None,
+            streaming: bool = False) -> SolverEntry:
     """The one dispatch policy: explicit route wins, else the paper's auto
     rule. ``problem`` is a :class:`repro.api.spec.ProblemSpec` (or a bare
     ``KernelSpec``); ``cfg`` an optional ``SODMConfig`` supplying the
-    ``engine`` pin and ``dsvrg_threshold``.
+    ``engine`` pin and ``dsvrg_threshold``; ``streaming`` marks a fit fed
+    by a ShardedSource (routes without an out-of-core driver refuse).
     """
     kernel_name = getattr(getattr(problem, "kernel", problem), "name")
     if route is not None:
@@ -180,17 +200,18 @@ def resolve(problem, M: int, mesh: jax.sharding.Mesh | None = None,
                 f"route={route!r} with SODMConfig.engine='dsvrg' is "
                 f"contradictory — use route='dsvrg', or leave route unset "
                 f"(the resolve policy honors the engine pin)")
-        entry.check(kernel_name, M, mesh)
+        entry.check(kernel_name, M, mesh, streaming)
         return entry
     engine = getattr(cfg, "engine", None)
     threshold = getattr(cfg, "dsvrg_threshold", DSVRG_AUTO_THRESHOLD)
     return resolve_auto(kernel_name, M, engine=engine, threshold=threshold,
-                        mesh=mesh)
+                        mesh=mesh, streaming=streaming)
 
 
 def resolve_auto(kernel_name: str, M: int, *, engine: str | None = None,
                  threshold: int = DSVRG_AUTO_THRESHOLD,
-                 mesh: jax.sharding.Mesh | None = None) -> SolverEntry:
+                 mesh: jax.sharding.Mesh | None = None,
+                 streaming: bool = False) -> SolverEntry:
     """The paper's linear-kernel dispatch (Section 3.3), PR 3 semantics.
 
     ``engine="dsvrg"`` demands the dsvrg route (raises for nonlinear
@@ -199,14 +220,24 @@ def resolve_auto(kernel_name: str, M: int, *, engine: str | None = None,
     an unset engine (``None``) routes linear-kernel problems with
     M >= ``threshold`` to dsvrg and everything else to sodm. Replaces
     ``engines.wants_dsvrg`` as the single source of this rule.
+
+    Streaming fits narrow the menu to the out-of-core drivers: linear
+    kernels (or an explicit dsvrg engine pin) stream through dsvrg —
+    a source is by definition past the threshold regime — and every
+    other kernel streams through the cascade.
     """
-    if engine == "dsvrg":
+    if streaming:
+        if engine == "dsvrg" or kernel_name == "linear":
+            entry = get("dsvrg")
+        else:
+            entry = get("cascade")
+    elif engine == "dsvrg":
         entry = get("dsvrg")
     elif engine is None and kernel_name == "linear" and M >= threshold:
         entry = get("dsvrg")
     else:
         entry = get("sodm")
-    entry.check(kernel_name, M, mesh)
+    entry.check(kernel_name, M, mesh, streaming)
     return entry
 
 
@@ -251,6 +282,17 @@ def _hooks(fit_kw) -> dict:
             if fit_kw.get(k) is not None}
 
 
+def _stream_hooks(fit_kw) -> dict:
+    """:func:`_hooks` plus the loader knobs only the streaming drivers
+    take: prefetch ``depth``, injected ``executor``/``metrics`` (chaos
+    and instrument tests), and the resident-byte ``accountant``."""
+    kw = _hooks(fit_kw)
+    kw.update({k: fit_kw[k]
+               for k in ("depth", "executor", "metrics", "accountant")
+               if fit_kw.get(k) is not None})
+    return kw
+
+
 def _fit_sodm(problem, x, y, key, *, cfg, mesh, data_axis, auto,
               compile_kw, fit_kw) -> RouteOutput:
     del auto
@@ -271,6 +313,21 @@ def _fit_sodm(problem, x, y, key, *, cfg, mesh, data_axis, auto,
 
 def _fit_dsvrg(problem, x, y, key, *, cfg, mesh, data_axis, auto,
                compile_kw, fit_kw) -> RouteOutput:
+    if y is None:                      # x is a ShardedSource (streaming fit)
+        del mesh, data_axis, auto, compile_kw
+        source = x
+        dres, kkt = dsvrg_mod._solve_stream(source, problem.params,
+                                            cfg.dsvrg, key,
+                                            **_stream_hooks(fit_kw))
+        # the dual-recovery pass of the resident path is O(M) host state —
+        # a streaming fit compiles the artifact straight from the primal w
+        model = serve_model.FittedODM(spec=problem.kernel, w=dres.w,
+                                      n_train=int(source.n_rows),
+                                      compression="linear")
+        return RouteOutput(model=model, raw=dres, engine="dsvrg",
+                           passes=(len(dres.history),), kkt=float(kkt),
+                           eta=float(dres.eta),
+                           history=tuple(float(h) for h in dres.history))
     res, dres = sodm_mod._solve_dsvrg(problem.kernel, x, y, problem.params,
                                       cfg, key, mesh=mesh,
                                       data_axis=data_axis, auto=auto,
@@ -288,11 +345,17 @@ def _fit_dsvrg(problem, x, y, key, *, cfg, mesh, data_axis, auto,
 
 def _fit_cascade(problem, x, y, key, *, cfg, mesh, data_axis, auto,
                  compile_kw, fit_kw) -> RouteOutput:
-    del mesh, data_axis, auto, fit_kw
-    res = baselines_mod._cascade_solve(problem.kernel, x, y, problem.params,
-                                       levels=cfg.levels, key=key,
-                                       tol=cfg.tol,
-                                       max_sweeps=cfg.max_sweeps)
+    del mesh, data_axis, auto
+    if y is None:                      # x is a ShardedSource (streaming fit)
+        res = baselines_mod._cascade_solve_stream(
+            problem.kernel, x, problem.params, levels=cfg.levels, key=key,
+            tol=cfg.tol, max_sweeps=cfg.max_sweeps, **_stream_hooks(fit_kw))
+    else:
+        del fit_kw
+        res = baselines_mod._cascade_solve(problem.kernel, x, y,
+                                           problem.params, levels=cfg.levels,
+                                           key=key, tol=cfg.tol,
+                                           max_sweeps=cfg.max_sweeps)
     model = serve_model.from_cascade(problem.kernel, res, **compile_kw)
     return RouteOutput(model=model, raw=res, engine="scalar",
                        passes=(res.levels_run,))
@@ -374,15 +437,17 @@ register(SolverEntry(
 register(SolverEntry(
     name="dsvrg", fit=_fit_dsvrg,
     algorithm="Alg. 2 (communication-efficient SVRG)",
-    kernels=_LINEAR, mesh_aware=True, matrix_free=True,
+    kernels=_LINEAR, mesh_aware=True, matrix_free=True, streaming=True,
     scale_min=DSVRG_AUTO_THRESHOLD,
     description="primal round-robin SVRG; dual recovered via "
-                "odm.alpha_from_w; auto-selected for big linear problems"))
+                "odm.alpha_from_w; auto-selected for big linear problems; "
+                "accepts a ShardedSource (out-of-core epochs)"))
 register(SolverEntry(
     name="cascade", fit=_fit_cascade,
     algorithm="Ca-ODM (Graf et al. 2004 cascade)",
-    kernels=None, mesh_aware=False, matrix_free=False,
-    description="binary support-vector funnel; fast but lossy baseline"))
+    kernels=None, mesh_aware=False, matrix_free=False, streaming=True,
+    description="binary support-vector funnel; fast but lossy baseline; "
+                "accepts a ShardedSource (leaves train as shards arrive)"))
 register(SolverEntry(
     name="dip", fit=_fit_dip,
     algorithm="DiP-ODM (Singh et al. 2017)",

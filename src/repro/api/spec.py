@@ -96,3 +96,23 @@ class ProblemSpec:
                 f"margin formula assume it); {bad} of {y.shape[0]} rows "
                 f"are not")
         return x, y.astype(x.dtype)
+
+    def validate_source(self, source) -> None:
+        """Structural checks for a streaming fit's ShardedSource.
+
+        Cheap metadata-only validation — per-shard label checks happen
+        as shards stream through the loader (``iter_slabs``), not here;
+        a source's whole point is that nobody reads all of it up front.
+        """
+        n_rows = int(getattr(source, "n_rows"))
+        n_features = int(getattr(source, "n_features"))
+        if n_rows <= 0:
+            raise ValueError(f"empty training source (n_rows={n_rows})")
+        if n_features < 1:
+            raise ValueError(
+                f"source must have >= 1 feature, got {n_features}")
+        sizes = tuple(source.shard_sizes())
+        if sum(sizes) != n_rows:
+            raise ValueError(
+                f"source shard sizes sum to {sum(sizes)} but n_rows is "
+                f"{n_rows} — the source is inconsistent")

@@ -88,13 +88,14 @@ def cascade_solve(spec: kf.KernelSpec, x: Array, y: Array, params: ODMParams,
 
 def _cascade_solve(spec: kf.KernelSpec, x: Array, y: Array,
                    params: ODMParams, levels: int, key: jax.Array,
-                   tol: float = 1e-4,
-                   max_sweeps: int = 100) -> CascadeResult:
+                   tol: float = 1e-4, max_sweeps: int = 100,
+                   perm: Array | None = None) -> CascadeResult:
     M = x.shape[0]
     K = 2 ** levels
     if M % K != 0:
         raise ValueError(f"2^levels={K} must divide M={M}")
-    perm = part_mod.random_partitions(M, K, key)
+    if perm is None:
+        perm = part_mod.random_partitions(M, K, key)
     xp, yp = x[perm], y[perm]
     m = M // K
     xs = xp.reshape(K, m, -1)
@@ -130,6 +131,122 @@ def _cascade_solve(spec: kf.KernelSpec, x: Array, y: Array,
         alphas = jax.vmap(sodm_mod.merge_alphas)(grouped)
     return CascadeResult(x_sv=xs[0], y_sv=ys[0], alpha=alphas[0],
                          levels_run=lvl)
+
+
+def _cascade_solve_stream(spec: kf.KernelSpec, source, params: ODMParams,
+                          levels: int, key: jax.Array | None = None,
+                          tol: float = 1e-4, max_sweeps: int = 100, *,
+                          faults=None, tracker=None, resume=None,
+                          depth: int = 2, executor=None, metrics=None,
+                          accountant=None) -> CascadeResult:
+    """Out-of-core cascade: level-0 partitions train as shards arrive.
+
+    The dense solver loads all M rows, deals them into 2^levels leaves
+    and sweeps the funnel level by level. This driver instead runs the
+    cascade as an online binary tournament: each arriving leaf (one
+    ``M / 2^levels``-row slab of the stream, cut on global row indices
+    by ``iter_slabs``) is solved immediately, and whenever two
+    same-level survivors sit on top of the merge stack they funnel the
+    instant both exist — keep the top half of each
+    (:func:`_top_support`), concatenate, warm-start from the merged
+    duals (:func:`repro.core.sodm.merge_alphas`) and re-solve. At most
+    ``levels + 1`` partially-merged nodes are ever resident, so host
+    memory is O(leaf_rows · levels) whatever M is.
+
+    With the dense solver given ``perm = arange(M)`` the tournament
+    pairs exactly the same instances into exactly the same nodes; the
+    results differ only by vmap-vs-single solve numerics (the parity
+    tests pin ≤ 1e-5). Leaves stream in stream order — ``key`` is
+    accepted for signature parity and unused.
+
+    Instrumentation: the ``cascade.shard`` fault site fires per leaf
+    (``data.prefetch`` fires underneath, inside the loader), a
+    ``cascade.shard`` span wraps each leaf's solve+merge work, the
+    tracker logs per-leaf throughput, and ``resume`` (a
+    :class:`~repro.distributed.resume.CascadeResumeManager`) checkpoints
+    the merge stack after each leaf — a restart re-enters the stream at
+    the first unprocessed leaf without re-reading completed shards.
+    """
+    import time as _time
+
+    from repro.data.streaming import loader as stream_loader
+    from repro.observe.spans import span as _span
+
+    M = int(source.n_rows)
+    K = 2 ** levels
+    if M % K != 0:
+        raise ValueError(f"2^levels={K} must divide M={M}")
+    del key
+    m0 = M // K
+    if metrics is None and tracker is not None:
+        from repro.observe import MetricsRegistry
+        metrics = MetricsRegistry()
+
+    solvers: dict[int, object] = {}
+
+    def solve_node(xn, yn, a0):
+        m = int(xn.shape[0])
+        if m not in solvers:
+            def fn(xn, yn, a0, m=m):
+                Q = kf.signed_gram(spec, xn, yn)
+                return dual_cd.solve(Q, params, mscale=float(m), alpha0=a0,
+                                     tol=tol, max_sweeps=max_sweeps).alpha
+            solvers[m] = jax.jit(fn)
+        return solvers[m](xn, yn, a0)
+
+    # merge stack: (tier, x (m, d), y (m,), alpha (2m,)) — tier t holds
+    # the solved merge of 2^t consecutive leaves
+    stack: list[tuple[int, Array, Array, Array]] = []
+    start_leaf = 0
+    if resume is not None:
+        restored = resume.restore_stream()
+        if restored is not None:
+            start_leaf = restored.leaf
+            stack = [(t, jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(al))
+                     for t, xs, ys, al in restored.stack]
+
+    def funnel():
+        while len(stack) >= 2 and stack[-1][0] == stack[-2][0]:
+            tier, xb, yb, ab = stack.pop()
+            _, xa, ya, aa = stack.pop()
+            keep = int(xa.shape[0]) // 2
+            xa, ya, aa = _top_support(xa, ya, aa, keep)
+            xb, yb, ab = _top_support(xb, yb, ab, keep)
+            xm = jnp.concatenate([xa, xb])
+            ym = jnp.concatenate([ya, yb])
+            am = sodm_mod.merge_alphas(jnp.stack([aa, ab]))
+            stack.append((tier + 1, xm, ym, solve_node(xm, ym, am)))
+
+    slabs = stream_loader.iter_slabs(
+        source, m0, start_row=start_leaf * m0, depth=depth,
+        executor=executor, metrics=metrics, faults=faults,
+        accountant=accountant)
+    for slab in slabs:
+        leaf = slab.start // m0
+        if faults is not None:
+            faults.site("cascade.shard", shard=leaf)
+        t0 = _time.perf_counter()
+        with _span("cascade.shard", shard=leaf, rows=m0):
+            xl = jnp.asarray(slab.x)
+            yl = jnp.asarray(slab.y)
+            al = solve_node(xl, yl, jnp.zeros(2 * m0, xl.dtype))
+            stack.append((0, xl, yl, al))
+            funnel()
+        if tracker is not None:
+            jax.block_until_ready(stack[-1][3])
+            wall = _time.perf_counter() - t0
+            tracker.log_metrics(leaf + 1, {
+                "route": "cascade", "leaf": leaf, "rows": m0,
+                "wall_s": wall, "rows_per_s": m0 / max(wall, 1e-9)})
+        if resume is not None:
+            resume.save_stream(leaf=leaf + 1, stack=stack)
+    if len(stack) != 1:               # K is a power of two: cannot happen
+        raise RuntimeError(f"merge stack did not collapse: {len(stack)}")
+    if metrics is not None and tracker is not None:
+        metrics.drain(tracker, step=K)
+    _, x_sv, y_sv, alpha = stack[0]
+    return CascadeResult(x_sv=x_sv, y_sv=y_sv, alpha=alpha,
+                         levels_run=levels + 1)
 
 
 def cascade_predict(spec: kf.KernelSpec, res: CascadeResult,

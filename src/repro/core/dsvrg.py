@@ -81,6 +81,9 @@ class DSVRGConfig:
     #                                 interpret mode / CPU
     coreset_frac: float = 0.1       # anchor-coreset fraction of the csvrg
     #                                 baseline route (ignored elsewhere)
+    stream_slab: int = 4096         # rows per host->device slab on the
+    #                                 streaming path (_solve_stream); rounded
+    #                                 up to a multiple of ``batch``
 
 
 def auto_eta(x: Array, params: ODMParams, frac: float = 0.5) -> float:
@@ -235,6 +238,12 @@ def _partition_perm(x: Array, cfg: DSVRGConfig, K: int,
                     key: jax.Array) -> Array:
     from repro.core import kernel_fns as kf
     M = x.shape[0]
+    if cfg.partition_strategy == "identity":
+        # stream-order chain: rows stay where they are. This is what the
+        # streaming driver implicitly uses (it has no global perm), so
+        # the dense-vs-streaming parity tests run the dense solver with
+        # this strategy to make the two inner chains comparable.
+        return jnp.arange(M)
     if cfg.partition_strategy == "stratified":
         # linear kernel: strata in input space (phi = identity)
         spec = kf.KernelSpec(name="linear")
@@ -309,6 +318,168 @@ def _solve(x: Array, y: Array, params: ODMParams, cfg: DSVRGConfig,
                                   faults=faults, tracker=tracker,
                                   resume=resume)
     return DSVRGResult(w=w, history=hist, perm=perm, eta=eta)
+
+
+# ---------------------------------------------------------------------------
+# streaming driver (out-of-core: consumes a ShardedSource slab by slab)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _make_stream_steps(params: ODMParams, batch: int, fused: bool):
+    """The two jitted per-slab kernels of the streaming driver.
+
+    ``stats(anchor, xf, yf, wf, M)`` — one slab's contribution to the
+    full-gradient / objective / ‖x‖² reductions of an epoch's anchor
+    pass (flat padded rows, scaled by the true global M so partials sum
+    to the dense quantities).
+
+    ``inner(w, anchor, h, eta, xs, ys, wts)`` — the SVRG inner chain
+    over one slab's pre-sliced (C, b, ·) minibatches: exactly
+    ``_epoch_serial``'s inner scan, except a fully-padded minibatch
+    (weight-sum 0, which only the zero-padded final slab can produce)
+    is masked to a no-op instead of stepping by ``w − anchor + h``.
+
+    Cached per (params, batch, fused) with jit handling shapes, so a
+    whole streaming fit is two traces per config — the same trace-once
+    discipline as the resident drivers, pinned via ``_TRACE_EVENTS``.
+    """
+
+    @functools.partial(jax.jit, static_argnames=("M",))
+    def stats(anchor, xf, yf, wf, *, M):
+        _TRACE_EVENTS.append(("stream.stats", params, batch, M))
+        gpart = _loss_grad(anchor, xf, yf, params, M, fused)
+        ridge = 0.5 * anchor @ anchor
+        losspart = odm.primal_objective(anchor, xf, yf, params, weights=wf,
+                                        total=M) - ridge
+        sqpart = jnp.sum(wf * jnp.sum(xf * xf, axis=-1))
+        return gpart, losspart, sqpart
+
+    @jax.jit
+    def inner(w, anchor, h, eta, xs, ys, wts):
+        _TRACE_EVENTS.append(("stream.inner", params, batch))
+
+        def step(w, sl):
+            xb, yb, wb = sl
+            live = jnp.where(jnp.sum(wb) > 0.0, eta, jnp.zeros_like(eta))
+            return w - live * _direction(w, anchor, h, xb, yb, wb, params,
+                                         fused), None
+
+        w, _ = jax.lax.scan(step, w, (xs, ys, wts))
+        return w
+
+    return stats, inner
+
+
+def _solve_stream(source, params: ODMParams, cfg: DSVRGConfig,
+                  key: jax.Array | None = None, w0: Array | None = None, *,
+                  faults=None, tracker=None, resume=None, depth: int = 2,
+                  executor=None, metrics=None, accountant=None
+                  ) -> tuple[DSVRGResult, Array]:
+    """Out-of-core DSVRG: epochs stream ``cfg.stream_slab``-row slabs
+    from a :class:`repro.data.streaming.sources.ShardedSource` through
+    the prefetch loader; the (M, d) matrix is never resident.
+
+    Per epoch, two passes over the stream: an anchor pass accumulating
+    the full gradient h (plus the previous iterate's objective and, on
+    the very first pass, the ``auto_eta`` ‖x‖² sum), then the serial
+    SVRG inner chain over the global minibatch sequence. Slab
+    boundaries are global row indices (``iter_slabs``), so every
+    reduction runs in a fixed order — the fitted ``w`` is bitwise
+    invariant to how the source is sharded, and a kill/resume replay
+    through :class:`~repro.distributed.resume.DsvrgResumeManager` is
+    bitwise identical to the uninterrupted run. Relative to the
+    resident solver this is the K=1 stream-order chain
+    (``partition_strategy="identity"``); ``n_partitions`` /
+    ``partition_strategy`` are ignored.
+
+    Returns ``(result, kkt)`` with ``result.perm = None`` (a stream has
+    no materialized permutation) and ``kkt = ‖∇p(w)‖∞`` from a terminal
+    gradient pass — the primal-stationarity analogue of the dual
+    routes' projected-gradient residual.
+    """
+    from repro.data.streaming import loader as stream_loader
+
+    M, d = int(source.n_rows), int(source.n_features)
+    if M <= 0:
+        raise ValueError("streaming solve needs a non-empty source")
+    if cfg.schedule != "serial":
+        raise ValueError(
+            "streaming DSVRG supports schedule='serial' only (the "
+            "parallel schedule needs all K chains resident at once); "
+            f"got {cfg.schedule!r}")
+    del key                      # stream order is the partition order
+    b = min(cfg.batch, M)
+    R = -(-max(cfg.stream_slab, b) // b) * b      # slab rows, multiple of b
+    C = R // b
+    dtype = jnp.zeros(0, dtype=source.dtype).dtype
+    stats_fn, inner_fn = _make_stream_steps(params, b, _resolve_fused(cfg))
+
+    if metrics is None and tracker is not None:
+        from repro.observe import MetricsRegistry
+        metrics = MetricsRegistry()
+
+    def slabs():
+        return stream_loader.iter_slabs(
+            source, R, depth=depth, executor=executor, metrics=metrics,
+            faults=faults, accountant=accountant)
+
+    def slab_weights(n_valid: int):
+        return (jnp.arange(R) < n_valid).astype(dtype)
+
+    def anchor_pass(anchor):
+        g = jnp.zeros(d, dtype)
+        loss = jnp.zeros((), dtype)
+        sq = jnp.zeros((), dtype)
+        for slab in slabs():
+            gp, lp, sp = stats_fn(anchor, jnp.asarray(slab.x),
+                                  jnp.asarray(slab.y),
+                                  slab_weights(slab.n_valid), M=M)
+            g, loss, sq = g + gp, loss + lp, sq + sp
+        return g, loss, sq
+
+    eta_box: list = [jnp.asarray(cfg.eta, dtype) if cfg.eta > 0 else None]
+    kkt_box: list = [jnp.zeros((), dtype)]
+
+    def runner(w, n):
+        """n epochs from iterate w -> (w', hist_n, eta); the _segmented
+        contract. History entry e is obj(w after epoch e), read off the
+        next epoch's anchor pass (or a terminal pass for the last one) —
+        the streamed anchor pass already evaluates the objective, so no
+        extra scan is spent on history except at segment end."""
+        if n <= 0:
+            eta0 = eta_box[0] if eta_box[0] is not None \
+                else jnp.zeros((), dtype)
+            return w, jnp.zeros((0,), dtype), eta0
+        hist = []
+        for e in range(n):
+            anchor = w
+            g, loss, sq = anchor_pass(anchor)
+            if eta_box[0] is None:
+                eta_box[0] = _eta_from_sumsq(sq, params, M).astype(dtype)
+            if e > 0:
+                hist.append(0.5 * anchor @ anchor + loss)
+            h = anchor + g
+            for slab in slabs():
+                xs = jnp.asarray(slab.x).reshape(C, b, d)
+                ys = jnp.asarray(slab.y).reshape(C, b)
+                wts = slab_weights(slab.n_valid).reshape(C, b)
+                w = inner_fn(w, anchor, h, eta_box[0], xs, ys, wts)
+        g, loss, _ = anchor_pass(w)
+        hist.append(0.5 * w @ w + loss)
+        kkt_box[0] = jnp.max(jnp.abs(w + g))
+        return w, jnp.stack(hist), eta_box[0]
+
+    w0 = jnp.zeros(d, dtype) if w0 is None else w0
+    if faults is None and tracker is None and resume is None:
+        w, hist, eta = runner(w0, cfg.epochs)
+    else:
+        w, hist, eta = _segmented(runner, w0, cfg, M,
+                                  perm=jnp.zeros((0,), jnp.int32),
+                                  faults=faults, tracker=tracker,
+                                  resume=resume)
+    if metrics is not None and tracker is not None:
+        metrics.drain(tracker, step=cfg.epochs)
+    return DSVRGResult(w=w, history=hist, perm=None, eta=eta), kkt_box[0]
 
 
 # ---------------------------------------------------------------------------

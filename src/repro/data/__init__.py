@@ -1,3 +1,3 @@
-from repro.data import lm, stratified, synthetic
+from repro.data import lm, stratified, streaming, synthetic
 
-__all__ = ["lm", "stratified", "synthetic"]
+__all__ = ["lm", "stratified", "streaming", "synthetic"]

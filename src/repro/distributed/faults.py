@@ -22,6 +22,12 @@ site                   where it fires
                        the fsync'd temp write and the atomic rename —
                        the crash window (``step=``)
 ``serve.flush``        before a ``Batcher`` flush scores (``batch=``)
+``data.prefetch``      inside the streaming ``PrefetchLoader``, before a
+                       shard read starts (``shard=``) — a kill surfaces
+                       out of the loader's iteration, a delay simulates
+                       slow storage
+``cascade.shard``      before the streaming cascade consumes an arrived
+                       level-0 leaf (``shard=`` — the leaf index)
 ====================== ====================================================
 
 A :class:`FaultPlan` holds match rules against those sites:
@@ -126,6 +132,18 @@ class FaultPlan:
         """Preempt the DSVRG driver before the segment starting at
         ``epoch``."""
         return self.kill("dsvrg.segment", epoch=epoch, count=count)
+
+    def kill_at_shard(self, shard: int, *, count: int = 1) -> "FaultPlan":
+        """Preempt the streaming cascade before it consumes leaf
+        ``shard`` (mid-stream driver death)."""
+        return self.kill("cascade.shard", shard=shard, count=count)
+
+    def delay_shard_read(self, shard: int, seconds: float, *,
+                         count: int = 1) -> "FaultPlan":
+        """Make one shard read straggle inside the prefetch loader
+        (slow-storage simulation)."""
+        return self.delay("data.prefetch", seconds, shard=shard,
+                          count=count)
 
     # -- the hook the instrumented loops call --------------------------------
 

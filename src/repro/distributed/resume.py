@@ -25,6 +25,13 @@ The DSVRG route checkpoints ``{w, history, perm}`` + ``{epoch, eta}``
 between scan segments (the anchor coincides with ``w`` at every epoch
 boundary, so ``w`` alone restarts the next epoch exactly).
 
+The *streaming* cascade (``fit(source)``) checkpoints its binary-counter
+merge stack after each consumed level-0 leaf (``mode="stream"`` in the
+manifest; one ``s{i}_x/s{i}_y/s{i}_alpha`` triple per stack entry), so a
+mid-stream kill re-enters at the first unprocessed shard without
+re-reading completed ones. Dense level checkpoints and stream leaf
+checkpoints refuse to resume each other.
+
 Checkpoint steps count *completed work* (levels solved / epochs run), so
 they are strictly increasing whatever direction the cascade's level
 index runs. All saves are synchronous: a cascade level is coarse-grained
@@ -88,6 +95,26 @@ def provenance(kernel, params, cfg, x, y, key) -> dict:
     }
 
 
+def provenance_source(kernel, params, cfg, source, key) -> dict:
+    """Streaming-fit provenance: fingerprint the *source*, not the rows.
+
+    A streaming fit never holds the (M, d) matrix, so summing it here
+    would defeat the point. ``source.fingerprint()`` is each source's
+    own cheap identity (paths + shard sizes for file-backed shards,
+    generator seed + shape for synthetic ones, exact sums for in-memory
+    arrays) — good enough to catch "resumed against different data"
+    without a full scan.
+    """
+    return {
+        "format": 1,
+        "kernel": repr(kernel),
+        "params": repr(params),
+        "cfg": repr(cfg),
+        "data": source.fingerprint(),
+        "key": _key_fingerprint(key),
+    }
+
+
 def _check_provenance(saved: dict, want: dict, strict: bool,
                       directory: str) -> bool:
     """True if compatible; raise (strict) or warn+False otherwise."""
@@ -144,6 +171,11 @@ class RestoredCascade(NamedTuple):
     kkt: jax.Array
 
 
+class RestoredStream(NamedTuple):
+    leaf: int                # level-0 leaves fully consumed so far
+    stack: list              # [(tier, x (m, d), y (m,), alpha (2m,)), ...]
+
+
 class RestoredSegments(NamedTuple):
     epoch: int               # epochs completed
     w: jax.Array
@@ -175,17 +207,8 @@ class CascadeResumeManager:
         })
 
     def restore(self) -> RestoredCascade | None:
-        step = self.ckpt.latest_step()
-        if step is None:
-            return None
-        manifest = self.ckpt.metadata(step)
-        md = manifest["metadata"]
-        if md.get("route") != self.route:
-            raise ProvenanceError(
-                f"resume directory {self.cfg.directory!r} holds "
-                f"{md.get('route')!r} checkpoints, not cascade state")
-        if not _check_provenance(md.get("provenance", {}), self.prov,
-                                 self.cfg.strict, self.cfg.directory):
+        md, manifest, step = self._latest("level")
+        if md is None:
             return None
         tree = self.ckpt.restore(_template_from_manifest(manifest), step)
         return RestoredCascade(
@@ -193,6 +216,65 @@ class CascadeResumeManager:
             alphas=tree["alphas"], perm=tree["perm"],
             sweeps_per_level=list(md["sweeps_per_level"]),
             kkt=jnp.asarray(md["kkt"], tree["alphas"].dtype))
+
+    # -- streaming cascade: merge-stack checkpoints per consumed leaf --------
+
+    def save_stream(self, *, leaf: int, stack) -> None:
+        """Checkpoint the binary-counter merge stack after leaf ``leaf``.
+
+        The stack entries have data-dependent (but per-tier fixed) row
+        counts, so each entry is saved under its own ``s{i}_*`` keys and
+        the tier list rides in the metadata — ``_template_from_manifest``
+        rebuilds the exact shapes on restore.
+        """
+        tree = {}
+        for i, (_, xs, ys, alpha) in enumerate(stack):
+            tree[f"s{i}_x"] = xs
+            tree[f"s{i}_y"] = ys
+            tree[f"s{i}_alpha"] = alpha
+        self.ckpt.save(leaf, tree, metadata={
+            "route": self.route,
+            "mode": "stream",
+            "leaf": int(leaf),
+            "tiers": [int(t) for t, *_ in stack],
+            "provenance": self.prov,
+        })
+
+    def restore_stream(self) -> RestoredStream | None:
+        md, manifest, step = self._latest("stream")
+        if md is None:
+            return None
+        tree = self.ckpt.restore(_template_from_manifest(manifest), step)
+        stack = [(int(t), tree[f"s{i}_x"], tree[f"s{i}_y"],
+                  tree[f"s{i}_alpha"])
+                 for i, t in enumerate(md["tiers"])]
+        return RestoredStream(leaf=int(md["leaf"]), stack=stack)
+
+    def _latest(self, mode: str):
+        """Latest checkpoint's (metadata, manifest, step) — or
+        ``(None,)*3`` for an empty/cold directory. Raises when the
+        directory holds another route's state or the other cascade
+        flavor's (dense level vs stream leaf checkpoints don't splice)."""
+        step = self.ckpt.latest_step()
+        if step is None:
+            return None, None, None
+        manifest = self.ckpt.metadata(step)
+        md = manifest["metadata"]
+        if md.get("route") != self.route:
+            raise ProvenanceError(
+                f"resume directory {self.cfg.directory!r} holds "
+                f"{md.get('route')!r} checkpoints, not cascade state")
+        saved_mode = md.get("mode", "level")
+        if saved_mode != mode:
+            raise ProvenanceError(
+                f"resume directory {self.cfg.directory!r} holds cascade "
+                f"{saved_mode!r} checkpoints but this fit runs in "
+                f"{mode!r} mode — a dense level solve and a streaming "
+                f"merge stack cannot resume each other")
+        if not _check_provenance(md.get("provenance", {}), self.prov,
+                                 self.cfg.strict, self.cfg.directory):
+            return None, None, None
+        return md, manifest, step
 
 
 class DsvrgResumeManager:

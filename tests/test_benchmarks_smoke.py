@@ -22,7 +22,8 @@ pytestmark = pytest.mark.bench_smoke
 
 BENCH_MODULES = ["run", "common", "kernels_bench", "table2_rbf",
                  "table3_linear", "table4_svm", "fig2_speedup",
-                 "fig4_gradient", "roofline_report", "serve_bench"]
+                 "fig4_gradient", "roofline_report", "serve_bench",
+                 "data_bench"]
 
 
 @pytest.mark.parametrize("name", BENCH_MODULES)
@@ -33,7 +34,7 @@ def test_bench_module_imports(name):
 def test_run_registry_covers_all_tables():
     from benchmarks import run
     assert set(run.ALL) == {"table2", "table3", "table4", "fig2", "fig4",
-                            "kernels", "roofline", "serve"}
+                            "kernels", "roofline", "serve", "data"}
 
 
 def test_bench_persist_schema(tmp_path):
